@@ -1,0 +1,35 @@
+"""Paper Fig. 3: sensitivity to alpha (local/collab trade-off) and gamma
+(LSH-similarity weighting)."""
+from __future__ import annotations
+
+import json
+
+from benchmarks.common import run_method
+
+ALPHAS = (0.2, 0.6, 1.0)
+GAMMAS = (0.01, 1.0, 1000.0)
+
+
+def run(dataset="mnist", seed=0, rounds=0, log=print):
+    out = {"alpha": {}, "gamma": {}}
+    for a in ALPHAS:
+        r = run_method("wpfed", dataset, seed, rounds=rounds,
+                       fed_overrides={"alpha": a})
+        out["alpha"][str(a)] = r["final_acc"]
+        log(f"fig3 alpha={a}: {r['final_acc']:.4f}")
+    for g in GAMMAS:
+        r = run_method("wpfed", dataset, seed, rounds=rounds,
+                       fed_overrides={"gamma": g})
+        out["gamma"][str(g)] = r["final_acc"]
+        log(f"fig3 gamma={g}: {r['final_acc']:.4f}")
+    return out
+
+
+def main():
+    out = run()
+    print(json.dumps(out, indent=1))
+    return out
+
+
+if __name__ == "__main__":
+    main()

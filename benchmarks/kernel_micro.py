@@ -1,0 +1,59 @@
+"""Kernel micro-benchmarks: LSH projection + Hamming (interpret-mode
+wall time is NOT TPU time — the derived column is the analytic TPU-v5e
+estimate from FLOP/byte counts; see EXPERIMENTS.md)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+from repro.kernels.lsh_projection import CHUNK
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+
+
+def bench_lsh(n_params=1 << 20, bits=256, iters=3):
+    x = jax.random.normal(jax.random.PRNGKey(0), (n_params,))
+    fn = jax.jit(lambda v: ref.lsh_project_sums_ref(v, 3, bits=bits))
+    fn(x).block_until_ready()
+    t0 = time.time()
+    for _ in range(iters):
+        fn(x).block_until_ready()
+    us = (time.time() - t0) / iters * 1e6
+    flops = 2.0 * n_params * bits
+    tpu_est_us = max(flops / PEAK_FLOPS, n_params * 4 / HBM_BW) * 1e6
+    return us, tpu_est_us
+
+
+def bench_hamming(m=128, words=8, iters=3):
+    bits = jax.random.bernoulli(jax.random.PRNGKey(1), 0.5, (m, words * 32))
+    codes = ops.pack_bits(jnp.where(bits, 1.0, -1.0))
+    fn = jax.jit(lambda c: ops.hamming_matrix(c, use_kernel=False))
+    fn(codes).block_until_ready()
+    t0 = time.time()
+    for _ in range(iters):
+        fn(codes).block_until_ready()
+    us = (time.time() - t0) / iters * 1e6
+    tpu_est_us = max(m * m * words * 8 / (PEAK_FLOPS / 16),
+                     m * words * 4 / HBM_BW) * 1e6
+    return us, tpu_est_us
+
+
+def main(log=print):
+    rows = []
+    for n in (1 << 18, 1 << 20, 1 << 22):
+        us, est = bench_lsh(n)
+        rows.append(("lsh_project_" + str(n), us, est))
+    for m in (64, 256):
+        us, est = bench_hamming(m)
+        rows.append((f"hamming_{m}x{m}", us, est))
+    for name, us, est in rows:
+        log(f"{name},{us:.1f},{est:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

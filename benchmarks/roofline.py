@@ -1,0 +1,57 @@
+"""Roofline report: formats the dry-run sweep JSONs into the
+EXPERIMENTS.md §Roofline table. (The sweeps themselves are produced by
+``python -m repro.launch.dryrun --all [--multi-pod] --json ...`` — they
+need a fresh process with 512 forced host devices.)"""
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def load(name):
+    path = os.path.join(RESULTS, name)
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def fmt_table(results, log=print):
+    log(f"| {'arch':24s} | {'shape':11s} | {'compute_s':>10s} | "
+        f"{'memory_s':>10s} | {'collective_s':>12s} | {'dominant':10s} | "
+        f"{'useful':>6s} |")
+    log("|" + "-" * 26 + "|" + "-" * 13 + "|" + "-" * 12 + "|" + "-" * 12
+        + "|" + "-" * 14 + "|" + "-" * 12 + "|" + "-" * 8 + "|")
+    for r in results:
+        if "skipped" in r:
+            log(f"| {r['arch']:24s} | {r['shape']:11s} | "
+                f"{'SKIP (' + r['skipped'][:40] + ')':>64s} |")
+            continue
+        if "error" in r:
+            log(f"| {r['arch']:24s} | {r['shape']:11s} | ERROR |")
+            continue
+        rf = r["roofline"]
+        log(f"| {r['arch']:24s} | {r['shape']:11s} | {rf['compute_s']:10.4f} | "
+            f"{rf['memory_s']:10.4f} | {rf['collective_s']:12.4f} | "
+            f"{rf['dominant'][:-2]:10s} | {rf['useful_flop_frac']:6.3f} |")
+
+
+def main(log=print):
+    ok = True
+    for name, label in (("dryrun_singlepod.json", "single-pod 16x16"),
+                        ("dryrun_multipod.json", "multi-pod 2x16x16")):
+        rs = load(name)
+        if rs is None:
+            log(f"(no {name} — run the dryrun sweep first)")
+            continue
+        errs = sum("error" in r for r in rs)
+        log(f"\n== Roofline: {label} — {len(rs)} combos, {errs} errors ==")
+        fmt_table(rs, log=log)
+        ok &= errs == 0
+    return ok
+
+
+if __name__ == "__main__":
+    main()

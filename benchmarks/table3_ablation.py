@@ -1,0 +1,39 @@
+"""Paper Table 3: ablation of LSH-similarity and rank-score selection.
+Variants: full WPFed, w/o LSH, w/o Rank, w/o both (random selection)."""
+from __future__ import annotations
+
+import json
+
+from benchmarks.common import BENCH_SEEDS, mean_std, run_method
+
+VARIANTS = {
+    "wpfed": {},
+    "wo_lsh": {"use_lsh": False},
+    "wo_rank": {"use_rank": False},
+    "wo_lsh_rank": {"use_lsh": False, "use_rank": False},
+}
+
+
+def run(dataset="mnist", seeds=BENCH_SEEDS, rounds=0, log=print):
+    table = {}
+    for name, overrides in VARIANTS.items():
+        results = [run_method("wpfed", dataset, seed, rounds=rounds,
+                              fed_overrides=overrides)
+                   for seed in seeds]
+        table[name] = mean_std(results)
+        log(f"table3 {dataset} {name:12s} {table[name]['mean']:.4f} "
+            f"± {table[name]['std']:.4f}")
+    base = table["wpfed"]["mean"]
+    for name in ("wo_lsh", "wo_rank", "wo_lsh_rank"):
+        table[name]["delta_vs_full"] = round(table[name]["mean"] - base, 4)
+    return table
+
+
+def main():
+    table = run()
+    print(json.dumps(table, indent=1))
+    return table
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""Batched serving demo: prefill a batch of prompts, decode with a KV
+cache, report tokens/s — including the sliding-window serving variant
+used by the long_500k dry-run shape.
+
+    PYTHONPATH=src python examples/serve_batch.py
+"""
+from repro.launch.serve import serve
+
+for arch, window in (("phi3-medium-14b", 0),
+                     ("phi3-medium-14b", 16),     # sliding-window variant
+                     ("recurrentgemma-2b", 0),    # hybrid: ring + RG-LRU
+                     ("whisper-small", 0)):       # enc-dec cross-attn
+    res = serve(arch, batch=4, prompt_len=24, max_new=12, reduced=True,
+                window_override=window)
+    label = f"{arch}" + (f" (window={window})" if window else "")
+    print(f"{label:40s} prefill {res['prefill_s']:.2f}s   "
+          f"decode {res['decode_tok_per_s']:7.1f} tok/s   "
+          f"sample {res['generated'][0][:6]}")

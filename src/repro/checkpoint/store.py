@@ -1,0 +1,71 @@
+"""Pytree checkpointing to .npz (orbax-free, offline-friendly).
+
+Layout: <dir>/step_<N>.npz with flattened key paths; tree structure is
+reconstructed from the key paths on restore (dicts / tuples / lists).
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten(tree) -> dict:
+    out = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_seg(p) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.name == "bfloat16":     # npz can't serialize ml_dtypes
+            arr = arr.astype(np.float32)     # (restore casts back per `like`)
+        out[key] = arr
+    return out
+
+
+def _seg(p) -> str:
+    if isinstance(p, jax.tree_util.DictKey):
+        return f"d:{p.key}"
+    if isinstance(p, jax.tree_util.SequenceKey):
+        return f"s:{p.idx}"
+    if isinstance(p, jax.tree_util.GetAttrKey):
+        return f"a:{p.name}"
+    return str(p)
+
+
+def save(ckpt_dir: str, step: int, tree: Any) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    tmp = path + ".tmp.npz"          # .npz suffix so np.savez doesn't append
+    np.savez(tmp, **_flatten(tree))
+    os.replace(tmp, path)
+    return path
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(ckpt_dir)
+             if (m := re.match(r"step_(\d+)\.npz$", f))]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, like: Any) -> Any:
+    """Restore into the structure of ``like`` (a template pytree)."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    with np.load(path) as data:
+        flat = {k: data[k] for k in data.files}
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path_keys, leaf in paths:
+        key = _SEP.join(_seg(p) for p in path_keys)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing {key}")
+        arr = flat[key]
+        if arr.shape != leaf.shape:
+            raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
+        leaves.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,9 @@
+"""The paper's primary contribution: the WPFed trust-free personalized
+decentralized learning protocol (LSH similarity, crowd-sourced ranking,
+weighted neighbor selection, verification, blockchain announcements)."""
+from repro.core.protocol import (  # noqa: F401
+    FedState,
+    evaluate,
+    init_state,
+    make_wpfed_round,
+)

@@ -1,0 +1,66 @@
+"""Adversarial behaviours from the paper's robustness studies.
+
+§4.7 LSH-cheating attack: attackers controlling half of a target's
+potential neighbors forge their published LSH codes to match the
+target's code (maximal apparent similarity) while their actual models
+are garbage — aiming to be selected and poison the target's distillation
+aggregate.
+
+§4.8 poison attack: a fraction of clients re-initialize their model
+parameters every 3 rounds after a 50-round honest warm-up, injecting
+noise into the network.
+
+Commit-and-reveal attack (for §3.6 tests): a client reveals a ranking
+different from the one it committed to.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.protocol import FedState
+
+
+def forge_lsh_codes(state: FedState, attacker_mask, target_id: int
+                    ) -> FedState:
+    """Attackers republish the target's LSH code as their own (Eq. 5
+    forgery). attacker_mask: (M,) bool."""
+    forged = jnp.where(attacker_mask[:, None], state.codes[target_id][None],
+                       state.codes)
+    return state._replace(codes=forged)
+
+
+def corrupt_params(state: FedState, attacker_mask, init_fn, key) -> FedState:
+    """Replace attackers' params with fresh random re-initializations."""
+    m = attacker_mask.shape[0]
+    keys = jnp.stack(list(jax.random.split(key, m)))
+    fresh = jax.vmap(init_fn)(keys)
+
+    def mix(old, new):
+        mask = attacker_mask.reshape((m,) + (1,) * (old.ndim - 1))
+        return jnp.where(mask, new.astype(old.dtype), old)
+
+    return state._replace(params=jax.tree.map(mix, state.params, fresh))
+
+
+def poison_step(state: FedState, attacker_mask, init_fn, key, round_idx: int,
+                *, start_round: int = 50, every: int = 3) -> FedState:
+    """§4.8: periodic re-initialization after warm-up."""
+    if round_idx >= start_round and (round_idx - start_round) % every == 0:
+        return corrupt_params(state, attacker_mask, init_fn, key)
+    return state
+
+
+def lie_in_reveal(state: FedState, liar_mask, key=None) -> FedState:
+    """Reveal a ranking that GUARANTEED differs from the committed one —
+    rotate the order and perturb the top entry (a random shuffle can be
+    the identity with probability 1/n!, which would not be a lie). The
+    §3.6 check must flag these reporters."""
+    del key
+    m, n = state.rankings.shape
+    lied = jnp.roll(state.rankings, 1, axis=1)
+    lied = lied.at[:, 0].add(1)          # differs even for width-1 rankings
+    new = jnp.where(liar_mask[:, None], lied, state.rankings)
+    return state._replace(rankings=new)

@@ -1,0 +1,150 @@
+"""Baseline methods from WPFed §4.2, sharing the FedState/data API so
+Table 2 / Fig. 5 comparisons are apples-to-apples.
+
+SILO    (Lian et al. 17):  purely local training, no collaboration.
+FedMD   (Li & Wang 19):    distillation toward the all-client consensus
+                           on a SHARED reference set, no selection.
+ProxyFL (Kalra et al. 23): uniform random gossip — each round every
+                           client distills from a few random peers
+                           (proxy-model exchange reduces, in logit space,
+                           to peer-output distillation).
+KD-PDFL (Jeong & K. 23):   similarity-only selection — neighbors chosen
+                           by output-KL similarity via knowledge
+                           distillation, no rank score, no verification.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.paper_models import FedConfig
+from repro.core import distill, verify
+from repro.core.protocol import FedState, batched_local_update
+from repro.optim.optimizers import Optimizer
+
+
+def _no_target(data):
+    ref_shape = data["x_ref"].shape            # (M, R, ...)
+    return None
+
+
+def make_silo_round(apply_fn, optimizer, fed: FedConfig):
+    m = fed.num_clients
+
+    def round_fn(state: FedState, data):
+        rng, rng_upd = jax.random.split(state.rng)
+        upd_keys = jax.vmap(
+            lambda i: jax.random.fold_in(rng_upd, i))(jnp.arange(m))
+        # zero distillation target, has_target=False -> pure local CE
+        dummy = jnp.zeros_like(
+            jax.vmap(apply_fn)(state.params, data["x_ref"]))
+        data_per = {k: data[k] for k in
+                    ("x_train", "y_train", "x_ref", "y_ref")}
+        params, opt_state, tm = batched_local_update(
+            apply_fn, optimizer, fed, state.params, state.opt_state, data_per, dummy,
+          jnp.zeros((m,), bool), upd_keys)
+        metrics = {"mean_loss": jnp.mean(tm["loss"])}
+        return state._replace(params=params, opt_state=opt_state, rng=rng,
+                              round=state.round + 1), metrics
+
+    return round_fn
+
+
+def make_fedmd_round(apply_fn, optimizer, fed: FedConfig, shared_ref_x):
+    """Consensus distillation on one shared reference set."""
+    m = fed.num_clients
+
+    def round_fn(state: FedState, data):
+        rng, rng_upd = jax.random.split(state.rng)
+        logits = jax.vmap(apply_fn, in_axes=(0, None))(
+            state.params, shared_ref_x)                    # (M,R,C)
+        consensus = jnp.mean(logits, axis=0)               # (R,C)
+        upd_keys = jax.vmap(
+            lambda i: jax.random.fold_in(rng_upd, i))(jnp.arange(m))
+        data_per = {k: data[k] for k in ("x_train", "y_train")}
+        data_per["x_ref"] = jnp.broadcast_to(
+            shared_ref_x[None], (m,) + shared_ref_x.shape)
+        data_per["y_ref"] = jnp.zeros((m, shared_ref_x.shape[0]), jnp.int32)
+        params, opt_state, tm = batched_local_update(
+            apply_fn, optimizer, fed, state.params, state.opt_state, data_per,
+          jnp.broadcast_to(consensus[None], logits.shape),
+          jnp.ones((m,), bool), upd_keys)
+        metrics = {"mean_loss": jnp.mean(tm["loss"])}
+        return state._replace(params=params, opt_state=opt_state, rng=rng,
+                              round=state.round + 1), metrics
+
+    return round_fn
+
+
+def make_proxyfl_round(apply_fn, optimizer, fed: FedConfig,
+                       num_peers: int = 3):
+    """Uniform random gossip distillation."""
+    m = fed.num_clients
+
+    def round_fn(state: FedState, data):
+        rng, rng_pick, rng_upd = jax.random.split(state.rng, 3)
+        ids = jax.vmap(
+            lambda k: jax.random.choice(k, m, (num_peers,), replace=False)
+        )(jnp.stack(list(jax.random.split(rng_pick, m))))   # (M,P)
+        nb_params = jax.tree.map(lambda p: p[ids], state.params)
+        y_web = jax.vmap(jax.vmap(apply_fn, in_axes=(0, None)))(
+            nb_params, data["x_ref"])                      # (M,P,R,C)
+        target = jnp.mean(y_web, axis=1)
+        upd_keys = jax.vmap(
+            lambda i: jax.random.fold_in(rng_upd, i))(jnp.arange(m))
+        data_per = {k: data[k] for k in
+                    ("x_train", "y_train", "x_ref", "y_ref")}
+        params, opt_state, tm = batched_local_update(
+            apply_fn, optimizer, fed, state.params, state.opt_state, data_per, target,
+          jnp.ones((m,), bool), upd_keys)
+        metrics = {"mean_loss": jnp.mean(tm["loss"])}
+        return state._replace(params=params, opt_state=opt_state, rng=rng,
+                              round=state.round + 1), metrics
+
+    return round_fn
+
+
+def make_kdpdfl_round(apply_fn, optimizer, fed: FedConfig):
+    """Similarity-only selection: top-N by output-KL on own ref set."""
+    m = fed.num_clients
+    n = min(fed.num_neighbors, m - 1)
+
+    def round_fn(state: FedState, data):
+        rng, rng_upd = jax.random.split(state.rng)
+        # all-pairs outputs on each client's own reference set
+        y_all = jax.vmap(                                   # over i (ref set)
+            jax.vmap(apply_fn, in_axes=(0, None))           # over j (model)
+        )(jax.tree.map(
+            lambda p: jnp.broadcast_to(p[None], (m,) + p.shape),
+            state.params), data["x_ref"])                  # (M,M,R,C)
+        own = jax.vmap(apply_fn)(state.params, data["x_ref"])
+        kls = jax.vmap(lambda o, ys: jax.vmap(
+            lambda y: verify.kl_divergence(o, y))(ys))(own, y_all)  # (M,M)
+        kls = jnp.where(jnp.eye(m, dtype=bool), jnp.inf, kls)
+        _, ids = jax.lax.top_k(-kls, n)                     # most similar
+        picked = jnp.take_along_axis(
+            y_all, ids[:, :, None, None], axis=1)           # (M,N,R,C)
+        target = jnp.mean(picked, axis=1)
+        upd_keys = jax.vmap(
+            lambda i: jax.random.fold_in(rng_upd, i))(jnp.arange(m))
+        data_per = {k: data[k] for k in
+                    ("x_train", "y_train", "x_ref", "y_ref")}
+        params, opt_state, tm = batched_local_update(
+            apply_fn, optimizer, fed, state.params, state.opt_state, data_per, target,
+          jnp.ones((m,), bool), upd_keys)
+        metrics = {"mean_loss": jnp.mean(tm["loss"])}
+        return state._replace(params=params, opt_state=opt_state, rng=rng,
+                              round=state.round + 1), metrics
+
+    return round_fn
+
+
+BASELINES = {
+    "silo": make_silo_round,
+    "fedmd": make_fedmd_round,
+    "proxyfl": make_proxyfl_round,
+    "kdpdfl": make_kdpdfl_round,
+}

@@ -1,0 +1,63 @@
+"""LSH similarity layer (WPFed §3.2, Eq. 5-6).
+
+Wraps the Pallas kernels (repro.kernels) with protocol-level APIs:
+per-client codes from parameter pytrees, the all-pairs distance matrix,
+and the normalized distance used inside the selection weight
+w_ij = s_j * exp(-gamma * d_ij).
+
+Normalization note (DESIGN.md §1): the paper's optimal gamma = 1.0 over
+a search space {0.01..1000} implies d is O(1); raw Hamming distances are
+O(bits), so we use the bit-fraction d/bits. A sharded-model extension
+(beyond-paper, DESIGN.md §3) computes partial projection sums per
+parameter shard and psums them — the full parameter vector never
+materializes on one device.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.kernels.ref import lsh_project_sums_ref
+
+
+def client_lsh_code(params, seed: int, bits: int = 256,
+                    use_kernel: bool = True):
+    """Eq. (5): packed uint32 code for one client's parameter pytree."""
+    return ops.lsh_code(params, seed, bits=bits, use_kernel=use_kernel)
+
+
+def stacked_lsh_codes(stacked_params, seed: int, bits: int = 256):
+    """Codes for vmap-stacked client params (M, ...). Uses the pure-jnp
+    oracle inside vmap (pallas_call has no batching rule in interpret
+    mode); semantics are kernel-identical (tested bit-exact)."""
+    def one(p):
+        flat = ops.flatten_params(p)
+        return ops.pack_bits(lsh_project_sums_ref(flat, seed, bits=bits))
+    return jax.vmap(one)(stacked_params)
+
+
+def sharded_lsh_code(local_shard_flat, seed: int, bits: int, axis_name: str):
+    """Beyond-paper: LSH of a *sharded* parameter vector inside
+    shard_map — each device projects its local shard chunk-offset by its
+    axis index, partial sums are psum'd, then packed. Linearity of the
+    projection makes this exact: sum over shards == projection of concat.
+    """
+    idx = jax.lax.axis_index(axis_name)
+    # offset the chunk index so each shard hashes with its global offset
+    n = local_shard_flat.shape[0]
+    offset = idx * n
+    from repro.kernels.lsh_projection import rademacher_block
+    r = rademacher_block(offset, n, bits, seed)
+    partial = jnp.dot(local_shard_flat.astype(jnp.float32), r)
+    total = jax.lax.psum(partial, axis_name)
+    return ops.pack_bits(total)
+
+
+def distance_matrix(codes, *, use_kernel: bool = True):
+    """Eq. (6) all-pairs: (M, W) uint32 -> (M, M) int32."""
+    return ops.hamming_matrix(codes, use_kernel=use_kernel)
+
+
+def normalized_distance(dist, bits: int):
+    return dist.astype(jnp.float32) / float(bits)

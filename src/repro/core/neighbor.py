@@ -1,0 +1,37 @@
+"""Personalized neighbor selection (WPFed §3.4, Eq. 8).
+
+w_ij = s_j * exp(-gamma * d_ij); each client takes the top-N weights
+(excluding itself). Ablation switches reproduce Table 3:
+  use_lsh=False  -> w_ij = s_j            ("w/o LSH")
+  use_rank=False -> w_ij = exp(-gamma d)  ("w/o Rank")
+  both False     -> uniform random selection ("w/o LSH & Rank")
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def selection_weights(scores, dist_norm, gamma: float, *,
+                      use_lsh: bool = True, use_rank: bool = True,
+                      rng=None):
+    """scores: (M,) f32; dist_norm: (M, M) f32 in [0,1] -> (M, M) f32."""
+    m = dist_norm.shape[0]
+    if use_rank:
+        w = jnp.broadcast_to(scores[None, :], (m, m))
+    else:
+        w = jnp.ones((m, m), jnp.float32)
+    if use_lsh:
+        w = w * jnp.exp(-gamma * dist_norm)
+    if not use_rank and not use_lsh:
+        assert rng is not None, "random selection needs an rng key"
+        w = jax.random.uniform(rng, (m, m))
+    return jnp.where(jnp.eye(m, dtype=bool), -jnp.inf, w)
+
+
+def select_neighbors(weights, num_neighbors: int):
+    """Top-N per row. weights: (M, M) -> ids (M, N) int32, mask (M, N)."""
+    n = min(num_neighbors, weights.shape[1] - 1)
+    top_w, top_i = jax.lax.top_k(weights, n)
+    mask = jnp.isfinite(top_w)
+    return top_i.astype(jnp.int32), mask

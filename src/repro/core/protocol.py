@@ -1,0 +1,191 @@
+"""The WPFed round (Algorithm 1), fully jit-able and vmapped over the
+client axis. One call = one federation iteration for all M clients:
+
+  1. verify last round's ranking reveals against commitments (§3.6)
+  2. LSH distances (Eq. 6) + ranking scores (Eq. 7) -> weights (Eq. 8)
+  3. top-N personalized neighbor selection
+  4. P2P reference-set logit exchange (the collective-friendly form of
+     the paper's point-to-point sends — DESIGN.md §3)
+  5. per-neighbor loss (Eq. 3) + LSH verification filter (§3.5)
+  6. local model update on the combined objective (Alg. 1 l.19)
+  7. new LSH codes, rankings, commitments -> next announcement
+
+Client models are homogeneous pytrees stacked on a leading (M,) axis;
+`launch/fed.py` shards that axis across the mesh for TPU-scale runs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.paper_models import FedConfig
+from repro.core import distill, lsh, neighbor, ranking, verify
+from repro.core.chain import fnv1a_commit
+from repro.optim.optimizers import Optimizer, apply_updates
+
+
+class FedState(NamedTuple):
+    params: Any          # stacked (M, ...)
+    opt_state: Any       # stacked (M, ...)
+    codes: jnp.ndarray   # (M, W) uint32 — published LSH codes
+    rankings: jnp.ndarray     # (M, N) int32 — this round's reveals
+    commitments: jnp.ndarray  # (M,) uint32 — commitments to `rankings`
+    rng: jnp.ndarray
+    round: jnp.ndarray   # scalar int32
+
+
+def init_state(apply_fn, init_fn, optimizer: Optimizer, fed: FedConfig,
+               key) -> FedState:
+    """init_fn(key) -> one client's params."""
+    m = fed.num_clients
+    keys = jnp.stack(list(jax.random.split(key, m)))
+    params = jax.vmap(init_fn)(keys)
+    opt_state = jax.vmap(optimizer.init)(params)
+    codes = lsh.stacked_lsh_codes(params, seed=0, bits=fed.lsh_bits)
+    n = min(fed.num_neighbors, m - 1)
+    rankings = -jnp.ones((m, n), jnp.int32)
+    commitments = fnv1a_commit(rankings, salt=0)
+    return FedState(params, opt_state, codes, rankings, commitments,
+                    jax.random.fold_in(key, 1), jnp.zeros((), jnp.int32))
+
+
+def _local_update(apply_fn, optimizer, fed: FedConfig, params, opt_state,
+                  data_i, target_ref, has_target, rng):
+    """`local_steps` minibatch steps on the combined loss for ONE client."""
+    n_local = data_i["x_train"].shape[0]
+    mb = min(fed.local_batch, n_local)
+
+    def step(carry, key):
+        p, s = carry
+        idx = jax.random.randint(key, (mb,), 0, n_local)
+        batch = {"x": data_i["x_train"][idx], "y": data_i["y_train"][idx]}
+        (loss, (l_loc, l_ref)), grads = jax.value_and_grad(
+            lambda q: distill.combined_loss(
+                apply_fn, q, batch, data_i["x_ref"], target_ref,
+                has_target, fed.alpha), has_aux=True)(p)
+        updates, s = optimizer.update(grads, s, p)
+        return (apply_updates(p, updates), s), (loss, l_loc, l_ref)
+
+    keys = jnp.stack(list(jax.random.split(rng, fed.local_steps)))
+    (params, opt_state), (losses, l_locs, l_refs) = jax.lax.scan(
+        step, (params, opt_state), keys)
+    return params, opt_state, {"loss": losses[-1], "local_loss": l_locs[-1],
+                               "ref_loss": l_refs[-1]}
+
+
+def batched_local_update(apply_fn, optimizer, fed: FedConfig, params,
+                         opt_state, data_per, target_ref, has_target, keys):
+    """Per-client local updates over the stacked (M, ...) axis.
+
+    Uses ``lax.map`` rather than ``vmap``: vmapping convolutions over
+    per-client *weights* forces XLA-CPU onto a grouped-conv path whose
+    gradients are ~25x slower (measured); sequential per-client bodies
+    keep the fast path. On TPU the client axis is sharded by
+    launch/fed.py, so the inner loop stays short there too.
+    """
+    def one(args):
+        p, s, d, t, h, k = args
+        return _local_update(apply_fn, optimizer, fed, p, s, d, t, h, k)
+
+    return jax.lax.map(one, (params, opt_state, data_per, target_ref,
+                             has_target, keys))
+
+
+def make_wpfed_round(apply_fn: Callable, optimizer: Optimizer,
+                     fed: FedConfig):
+    """Returns round_fn(state, data) -> (state, metrics). `data` is the
+    stacked federated dataset dict (see data.federated.stacked)."""
+    m = fed.num_clients
+    n = min(fed.num_neighbors, m - 1)
+
+    def round_fn(state: FedState, data: Dict[str, jnp.ndarray]
+                 ) -> Tuple[FedState, Dict[str, jnp.ndarray]]:
+        rng, rng_sel, rng_upd = jax.random.split(state.rng, 3)
+
+        # --- 1. §3.6 reveal verification --------------------------------
+        if fed.rank_verification:
+            reporter_mask = verify.verify_rankings_fnv(
+                state.rankings, state.commitments)
+        else:
+            reporter_mask = jnp.ones((m,), bool)
+
+        # --- 2-3. neighbor selection (Eq. 6-8) ---------------------------
+        d = lsh.distance_matrix(state.codes, use_kernel=False)
+        d_norm = lsh.normalized_distance(d, fed.lsh_bits)
+        scores = ranking.ranking_scores(
+            jnp.where(reporter_mask[:, None], state.rankings, -1),
+            m, fed.top_k)
+        w = neighbor.selection_weights(
+            scores, d_norm, fed.gamma, use_lsh=fed.use_lsh,
+            use_rank=fed.use_rank,
+            rng=rng_sel if not (fed.use_lsh or fed.use_rank) else None)
+        ids, sel_mask = neighbor.select_neighbors(w, n)     # (M,N)
+
+        # --- 4. P2P logit exchange on personal reference sets ------------
+        nb_params = jax.tree.map(lambda p: p[ids], state.params)  # (M,N,...)
+        y_web = jax.vmap(                                   # over clients i
+            jax.vmap(apply_fn, in_axes=(0, None))           # over neighbors j
+        )(nb_params, data["x_ref"])                         # (M,N,R,C)
+        own_ref = jax.vmap(apply_fn)(state.params, data["x_ref"])  # (M,R,C)
+
+        # --- 5. Eq. (3) losses + §3.5 LSH verification --------------------
+        l_ij = jax.vmap(lambda yl, y: jax.vmap(
+            lambda l: distill.cross_entropy(l, y))(yl))(
+            y_web, data["y_ref"])                           # (M,N)
+        if fed.lsh_verification:
+            valid = jax.vmap(verify.lsh_verification_mask)(
+                own_ref, y_web, sel_mask)
+        else:
+            valid = sel_mask
+
+        # --- 6. model update (Alg. 1 l.19) --------------------------------
+        target_ref, has_target = jax.vmap(
+            distill.aggregate_neighbor_outputs)(y_web, valid)
+        upd_keys = jax.vmap(
+            lambda i: jax.random.fold_in(rng_upd, i))(jnp.arange(m))
+        data_per = {k: data[k] for k in
+                    ("x_train", "y_train", "x_ref", "y_ref")}
+        params, opt_state, train_metrics = batched_local_update(
+            apply_fn, optimizer, fed, state.params, state.opt_state,
+            data_per, target_ref, has_target, upd_keys)
+
+        # --- 7. announcements for the next round --------------------------
+        seed = state.round + 1
+        codes = lsh.stacked_lsh_codes(params, seed=0, bits=fed.lsh_bits)
+        new_rankings = jax.vmap(ranking.make_ranking)(ids, l_ij, sel_mask)
+        commitments = fnv1a_commit(new_rankings, salt=0)
+
+        metrics = {
+            "round": state.round,
+            "mean_loss": jnp.mean(train_metrics["loss"]),
+            "mean_local_loss": jnp.mean(train_metrics["local_loss"]),
+            "mean_ref_loss": jnp.mean(train_metrics["ref_loss"]),
+            "mean_neighbor_loss": jnp.mean(
+                jnp.where(sel_mask, l_ij, 0.0)),
+            "valid_neighbor_frac": jnp.mean(valid.astype(jnp.float32)),
+            "honest_reporter_frac": jnp.mean(
+                reporter_mask.astype(jnp.float32)),
+            "neighbor_ids": ids,
+            "valid_mask": valid,
+            "ranking_scores": scores,
+        }
+        new_state = FedState(params, opt_state, codes, new_rankings,
+                             commitments, rng, state.round + 1)
+        return new_state, metrics
+
+    return round_fn
+
+
+def evaluate(apply_fn, state: FedState, data, honest_mask=None):
+    """Per-client test accuracy; mean over honest clients if mask given."""
+    logits = jax.vmap(apply_fn)(state.params, data["x_test"])
+    acc = jax.vmap(distill.accuracy)(logits, data["y_test"])
+    if honest_mask is not None:
+        mean = (jnp.sum(acc * honest_mask)
+                / jnp.maximum(jnp.sum(honest_mask), 1.0))
+    else:
+        mean = jnp.mean(acc)
+    return {"per_client_acc": acc, "mean_acc": mean}

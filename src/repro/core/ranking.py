@@ -1,0 +1,51 @@
+"""Performance rankings and crowd-sourced ranking scores (WPFed §3.3).
+
+R_i ranks client i's neighbors in ascending distillation loss l_ij
+(best-performing first). The global ranking score (Eq. 7):
+
+    s_j = |{R_k : j in top-K of R_k}| / |{R_k : j in R_k}|
+
+Rankings are fixed-width int32 vectors of neighbor ids padded with -1,
+so everything vmaps.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def make_ranking(neighbor_ids, losses, valid_mask=None):
+    """Sort neighbor ids by ascending loss. (N,) -> (N,) int32, -1 pad.
+
+    valid_mask: neighbors to include (e.g. only actually-contacted
+    peers); invalid entries sink to the end as -1.
+    """
+    losses = jnp.asarray(losses, jnp.float32)
+    if valid_mask is None:
+        valid_mask = jnp.ones_like(losses, bool)
+    keyed = jnp.where(valid_mask, losses, jnp.inf)
+    order = jnp.argsort(keyed)
+    ranked = jnp.take(neighbor_ids, order)
+    ok = jnp.take(valid_mask, order)
+    return jnp.where(ok, ranked, -1).astype(jnp.int32)
+
+
+def ranking_scores(rankings, num_clients: int, top_k: int,
+                   reporter_mask=None):
+    """Eq. (7). rankings: (M, N) int32 (-1 = absent).
+
+    reporter_mask: (M,) bool — rankings from clients that failed
+    commit-and-reveal verification are excluded entirely (§3.6).
+    Returns (num_clients,) f32 scores in [0, 1]; clients never ranked by
+    anyone get score 0 (no evidence of quality — consistent with the
+    paper's trust-free stance).
+    """
+    m, n = rankings.shape
+    if reporter_mask is None:
+        reporter_mask = jnp.ones((m,), bool)
+    onehot = jax.nn.one_hot(jnp.where(rankings >= 0, rankings, num_clients),
+                            num_clients + 1, dtype=jnp.float32)[..., :-1]
+    rep = reporter_mask[:, None, None].astype(jnp.float32)
+    appears = jnp.sum(onehot * rep, axis=(0, 1))              # (C,)
+    in_topk = jnp.sum(onehot[:, :top_k, :] * rep, axis=(0, 1))
+    return in_topk / jnp.maximum(appears, 1.0)

@@ -1,0 +1,48 @@
+"""Trust-free verification mechanisms.
+
+§3.5 LSH-code verification: during P2P exchange, client i compares its
+own reference-set outputs f(theta_i, X_i^ref) with each neighbor's
+f(theta_j, X_i^ref) via KL divergence. Neighbors whose output similarity
+ranks in the LOWER HALF are excluded from distillation — a forged LSH
+code cannot fake logits on a reference set the attacker has never seen.
+
+§3.6 ranking verification: commit-and-reveal (chain.py holds the SHA-256
+path; the in-graph FNV fast path is here).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.chain import fnv1a_commit
+
+
+def kl_divergence(logits_p, logits_q, axis: int = -1):
+    """KL(softmax(p) || softmax(q)), summed over classes, mean over batch."""
+    logp = jax.nn.log_softmax(logits_p, axis=axis)
+    logq = jax.nn.log_softmax(logits_q, axis=axis)
+    kl = jnp.sum(jnp.exp(logp) * (logp - logq), axis=axis)
+    return jnp.mean(kl, axis=-1)
+
+
+def lsh_verification_mask(own_logits, neighbor_logits, neighbor_mask):
+    """§3.5 filter. own_logits: (R, C); neighbor_logits: (N, R, C);
+    neighbor_mask: (N,) bool (selected neighbors).
+
+    Returns (N,) bool — True for neighbors that PASS (upper half by
+    output similarity). Invalid neighbors always fail.
+    """
+    kls = jax.vmap(lambda nl: kl_divergence(own_logits, nl))(
+        neighbor_logits)                                   # (N,)
+    kls = jnp.where(neighbor_mask, kls, jnp.inf)
+    n_valid = jnp.sum(neighbor_mask.astype(jnp.int32))
+    keep = (n_valid + 1) // 2                              # upper half
+    order = jnp.argsort(kls)                               # ascending KL
+    rank_of = jnp.argsort(order)                           # rank per entry
+    return (rank_of < keep) & neighbor_mask
+
+
+def verify_rankings_fnv(revealed, commitments, salt=0):
+    """In-graph commit check. revealed: (M, N) int32; commitments: (M,)
+    uint32 from last round. Returns (M,) bool reporter mask."""
+    return fnv1a_commit(revealed, salt) == commitments

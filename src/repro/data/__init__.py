@@ -1,0 +1,9 @@
+from repro.data.federated import (  # noqa: F401
+    DATASETS,
+    ClientData,
+    FederatedDataset,
+    make_aecg_federated,
+    make_mnist_federated,
+    make_seeg_federated,
+)
+from repro.data.synthetic import TokenStream, modality_stub  # noqa: F401

@@ -1,0 +1,83 @@
+"""Pallas TPU kernel: sign-random-projection LSH over a parameter vector.
+
+WPFed Eq. (5): lsh_i = LSH(theta_i, b). At LLM scale the parameter vector
+has up to 10^12 entries, so the P x b Gaussian projection matrix of the
+textbook construction can never be materialized. We instead use a
+*Rademacher* (+-1) projection whose entries are generated on the fly
+inside the kernel from a counter-based integer hash of (param_index,
+bit_index, seed) — an equally valid angular-distance LSH (sign random
+projection only needs a symmetric sub-Gaussian row distribution), with
+zero memory traffic for the projection matrix. This is the TPU-native
+adaptation recorded in DESIGN.md §3.
+
+Grid: one program per parameter chunk; each program materializes a
+(CHUNK, BITS) +-1 block in VREGs via iota hashing, computes the
+(1, CHUNK) x (CHUNK, BITS) partial product on the MXU, and accumulates
+into the (1, BITS) output block (revisited across the whole grid).
+
+VMEM budget per program ~= CHUNK*4 (x block) + CHUNK*BITS*4 (R block)
++ BITS*4 bytes; defaults (2048, 256) ~= 2.1 MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+CHUNK = 2048
+_K1 = 2654435761   # Knuth multiplicative hash (plain ints: pallas kernels
+_K2 = 40503        # may not close over externally-created jax arrays)
+_K3 = 2246822519
+
+
+def rademacher_block(i0, chunk, bits, seed):
+    """Deterministic +-1 block R[i0:i0+chunk, :bits] (f32).
+
+    Shared by kernel and oracle (ref.py imports it) — the hash is pure
+    uint32 arithmetic so it lowers identically on TPU and in interpret
+    mode on CPU.
+    """
+    i = (jnp.uint32(i0) + jax.lax.broadcasted_iota(jnp.uint32, (chunk, bits), 0))
+    j = jax.lax.broadcasted_iota(jnp.uint32, (chunk, bits), 1)
+    h = i * jnp.uint32(_K1) ^ (j * jnp.uint32(_K2)
+                               + jnp.uint32(seed) * jnp.uint32(_K3))
+    h = h ^ (h >> jnp.uint32(15))
+    h = h * jnp.uint32(_K3)
+    h = h ^ (h >> jnp.uint32(13))
+    bit = (h >> jnp.uint32(9)) & jnp.uint32(1)
+    return 1.0 - 2.0 * bit.astype(jnp.float32)
+
+
+def _lsh_kernel(seed_ref, x_ref, out_ref, *, bits: int):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x = x_ref[...].astype(jnp.float32)                    # (1, CHUNK)
+    r = rademacher_block(step * CHUNK, CHUNK, bits, seed_ref[0])
+    out_ref[...] += jnp.dot(x, r, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "interpret"))
+def lsh_project_sums(x, seed, *, bits: int = 256, interpret: bool = True):
+    """x: (P,) f32 (P padded to CHUNK by the caller) -> (bits,) f32 sums."""
+    assert x.ndim == 1 and x.shape[0] % CHUNK == 0, x.shape
+    n_chunks = x.shape[0] // CHUNK
+    x2 = x.reshape(n_chunks, CHUNK)
+    seed_arr = jnp.asarray([seed], jnp.uint32)
+    out = pl.pallas_call(
+        functools.partial(_lsh_kernel, bits=bits),
+        grid=(n_chunks,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),            # seed (revisited)
+            pl.BlockSpec((1, CHUNK), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bits), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, bits), jnp.float32),
+        interpret=interpret,
+    )(seed_arr, x2)
+    return out[0]

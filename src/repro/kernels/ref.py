@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for the Pallas kernels (bit-exact references)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.lsh_projection import CHUNK, rademacher_block
+from repro.kernels.hamming import popcount_u32
+
+
+def lsh_project_sums_ref(x, seed, *, bits: int = 256):
+    """Oracle for lsh_projection: same on-the-fly Rademacher matrix,
+    single dense matmul. x: (P,) with P % CHUNK == 0."""
+    p = x.shape[0]
+    r = rademacher_block(0, p, bits, seed)
+    return jnp.dot(x.astype(jnp.float32), r)
+
+
+def hamming_all_pairs_ref(codes_a, codes_b):
+    """Oracle for hamming: broadcast XOR + SWAR popcount."""
+    x = codes_a[:, None, :] ^ codes_b[None, :, :]
+    return jnp.sum(popcount_u32(x), axis=-1)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, scale: float = 0.0):
+    """Oracle for flash_attention: naive softmax attention.
+    q: (N, Sq, dh), k/v: (N, Sk, dh)."""
+    import jax
+    dh = q.shape[-1]
+    scale = scale or dh ** -0.5
+    s = jnp.einsum("nqd,nkd->nqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        sq, sk = s.shape[-2], s.shape[-1]
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(sk)[None, :]
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("nqk,nkd->nqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

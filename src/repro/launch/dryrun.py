@@ -1,0 +1,396 @@
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+on the production mesh, print memory/cost analyses, and emit the roofline
+terms (EXPERIMENTS.md §Dry-run / §Roofline read from this output).
+
+Counting modes (XLA's cost analysis tallies a while-loop body ONCE, so
+scanned-layer models under-report per-layer work):
+
+  scan2  (default) compile twice — lax.scan(unroll=1) and (unroll=2).
+         The count delta isolates one layer-body exactly, so
+         total = base + reps * body is reconstructed from compiled
+         artifacts at ~1/10th the compile cost of full unrolling.
+         memory_analysis comes from the unroll=1 executable (the form
+         real training runs).
+  unroll python-loop over layers (exact counts, expensive compiles —
+         used for the three §Perf hillclimb pairs).
+  scan   single lax.scan compile (fast smoke; counts under-report).
+
+Known caveat: inner *time* loops (xlstm's sLSTM step scan and mLSTM
+chunk scan) are still counted once in all modes; xlstm-350m compute
+terms are lower bounds (documented in EXPERIMENTS.md).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch minitron-4b \
+        --shape train_4k [--multi-pod] [--mode scan2] [--json out.json]
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+# The first two lines must run before ANY other import (jax locks the
+# device count at first init):
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import functools
+import json
+import math
+import re
+import sys
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, get_config, list_archs, supports_shape
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch.mesh import make_production_mesh
+from repro.models.transformer import init_cache, init_params, param_specs
+from repro.optim import adamw
+from repro.sharding import (batch_axes, cache_specs, named, opt_state_specs,
+                            train_batch_specs)
+from repro.train import (make_prefill_step, make_serve_step, make_train_step)
+
+# ---------------------------------------------------------------------------
+# hardware constants (TPU v5e, per task spec)
+# ---------------------------------------------------------------------------
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+DTYPE = jnp.bfloat16
+
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|[^\s(]+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_SHAPE_RE = re.compile(
+    r"(f64|f32|bf16|f16|f8e\w+|s64|s32|s16|s8|u64|u32|u16|u8|pred)"
+    r"\[([\d,]*)\]")
+_DT_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "s32": 4,
+             "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2, "u8": 1,
+             "pred": 1}
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Any]:
+    """Per-device collective bytes by op kind, parsed from post-SPMD HLO."""
+    per_kind: Dict[str, float] = {}
+    count = 0
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(2)
+        nbytes = 0
+        for dt, dims in _SHAPE_RE.findall(m.group(1)):
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DT_BYTES.get(dt.split("e")[0] if dt.startswith("f8")
+                                        else dt, 2)
+        per_kind[kind] = per_kind.get(kind, 0) + nbytes
+        count += 1
+    return {"bytes_by_kind": per_kind,
+            "total_bytes": sum(per_kind.values()),
+            "num_collectives": count}
+
+
+def _sanitize(spec_tree, shape_tree, mesh):
+    """Drop sharding on dims not divisible by the mesh axis size (e.g.
+    whisper's vocab 51865 on a 16-way model axis, or batch=1 for
+    long_500k on the 16-way data axis) — replicate those dims instead."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def fix(spec, sds):
+        if not isinstance(spec, P):
+            return spec
+        parts = list(spec) + [None] * (len(sds.shape) - len(spec))
+        out = []
+        for dim, ax in zip(sds.shape, parts):
+            if ax is None:
+                out.append(None)
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            div = math.prod(sizes[a] for a in axes)
+            out.append(ax if dim % div == 0 else None)
+        return P(*out)
+
+    return jax.tree.map(fix, spec_tree, shape_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _shard(mesh, spec_tree, sds_tree):
+    return named(mesh, _sanitize(spec_tree, sds_tree, mesh))
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStructs — no allocation ever happens)
+# ---------------------------------------------------------------------------
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                dtype=DTYPE) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Model inputs for the step lowered at this shape (stubs included)."""
+    b, s = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if shape.mode == "decode":
+        specs = {"tokens": sds((b,), jnp.int32)}
+    else:
+        specs = {"tokens": sds((b, s), jnp.int32),
+                 "labels": sds((b, s), jnp.int32)}
+    if cfg.is_encdec:
+        specs["audio"] = sds((b, cfg.encoder_seq_len, cfg.d_model), dtype)
+    if cfg.vision_tokens:
+        specs["vision"] = sds((b, cfg.vision_tokens,
+                               cfg.vision_dim or cfg.d_model), dtype)
+    return specs
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """MODEL_FLOPS = 6*N*D (train) / 2*N*D (prefill) / 2*N*B (decode),
+    N = active params (MoE: routed only)."""
+    n = cfg.active_param_count()
+    if shape.mode == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.mode == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch          # decode: one token / seq
+
+
+def _counts(compiled) -> Dict[str, Any]:
+    cost = compiled.cost_analysis() or {}
+    coll = collective_stats(compiled.as_text())
+    return {"flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "coll": coll}
+
+
+def _memory_stats(compiled) -> Dict[str, Any]:
+    try:
+        mem = compiled.memory_analysis()
+        return {
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+        }
+    except Exception as e:                                 # pragma: no cover
+        return {"error": str(e)}
+
+
+# ---------------------------------------------------------------------------
+# lower + compile one (arch, shape, mesh)
+# ---------------------------------------------------------------------------
+def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+               remat: str = "block", mode: str = "scan2",
+               moe_impl: str = "sharded",
+               verbose: bool = True) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = supports_shape(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "skipped": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    t0 = time.time()
+
+    # §Perf iterations 2-4 (EXPERIMENTS.md): MoE dispatch distribution.
+    #   moe_impl="jit"      textbook global dispatch (baseline)
+    #   moe_impl="sharded"  shard_map local-dispatch + psum (default; the
+    #                       jit-level variants replicate expert compute or
+    #                       all-reduce the dispatch buffer — both measured
+    #                       catastrophic at kimi/grok scale)
+    from repro.models import moe as moe_mod
+    moe_mod.set_dispatch_spec(None)
+    moe_mod.set_sharded_impl(None)
+    if cfg.is_moe and moe_impl == "sharded":
+        moe_mod.set_sharded_impl(mesh, batch_axes=batch_axes(mesh))
+
+    params_sds = jax.eval_shape(
+        functools.partial(init_params, cfg, dtype=DTYPE),
+        jax.random.PRNGKey(0))
+    p_shard = _shard(mesh, param_specs(cfg), params_sds)
+    batch_sds = input_specs(cfg, shape)
+    window_override = (cfg.serve_window
+                       if (shape.name == "long_500k"
+                           and cfg.family == "dense") else 0)
+
+    def build_lowered(unroll: bool, scan_unroll: int):
+        if shape.mode == "train":
+            opt = adamw(1e-4, weight_decay=0.1)
+            opt_sds = jax.eval_shape(opt.init, params_sds)
+            o_shard = _shard(mesh, opt_state_specs(cfg), opt_sds)
+            b_shard = _shard(mesh, {k: v for k, v in
+                                    train_batch_specs(cfg, mesh).items()
+                                    if k in batch_sds}, batch_sds)
+            step = make_train_step(cfg, opt, remat=remat, unroll=unroll,
+                                   scan_unroll=scan_unroll)
+            m_shard = jax.tree.map(lambda _: NamedSharding(mesh, P()),
+                                   {"loss": 0, "ce": 0, "moe_aux": 0,
+                                    "grad_norm": 0})
+            fn = jax.jit(step,
+                         in_shardings=(p_shard, o_shard, b_shard),
+                         out_shardings=(p_shard, o_shard, m_shard))
+            return fn.lower(params_sds, opt_sds, batch_sds)
+        if shape.mode == "prefill":
+            b_shard = _shard(mesh, {k: v for k, v in
+                                    train_batch_specs(cfg, mesh).items()
+                                    if k in batch_sds}, batch_sds)
+            step = make_prefill_step(cfg, unroll=unroll,
+                                     scan_unroll=scan_unroll)
+            out_sds = jax.eval_shape(step, params_sds, batch_sds)
+            logits_shard = _shard(mesh, P(batch_axes(mesh), "model"),
+                                  out_sds[0])
+            c_shard = _shard(mesh, cache_specs(cfg, mesh), out_sds[1])
+            fn = jax.jit(step, in_shardings=(p_shard, b_shard),
+                         out_shardings=(logits_shard, c_shard))
+            return fn.lower(params_sds, batch_sds)
+        # decode
+        b = shape.global_batch
+        extra_sds = {k: v for k, v in batch_sds.items() if k != "tokens"}
+        cache_len = min(shape.seq_len, window_override) \
+            if window_override else shape.seq_len
+        cache_sds = jax.eval_shape(
+            functools.partial(init_cache, cfg, batch=b, cache_len=cache_len,
+                              dtype=DTYPE, window_override=window_override),
+            params_sds, extra=extra_sds or None)
+        c_shard = _shard(mesh, cache_specs(cfg, mesh), cache_sds)
+        step = make_serve_step(cfg, window_override=window_override,
+                               unroll=unroll, scan_unroll=scan_unroll)
+        tok_sds = batch_sds["tokens"]
+        pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
+        out_sds = jax.eval_shape(step, params_sds, cache_sds, tok_sds,
+                                 pos_sds)
+        tok_shard = _shard(mesh, P(batch_axes(mesh)), tok_sds)
+        logits_shard = _shard(mesh, P(batch_axes(mesh), "model"), out_sds[1])
+        pos_shard = NamedSharding(mesh, P())
+        fn = jax.jit(step,
+                     in_shardings=(p_shard, c_shard, tok_shard, pos_shard),
+                     out_shardings=(tok_shard, logits_shard, c_shard))
+        return fn.lower(params_sds, cache_sds, tok_sds, pos_sds)
+
+    reps = cfg.pattern_reps
+    with mesh:
+        if mode == "unroll":
+            lowered = build_lowered(True, 1)
+            compiled = lowered.compile()
+            c1 = _counts(compiled)
+            flops, nbytes, coll = c1["flops"], c1["bytes"], c1["coll"]
+            mem_stats = _memory_stats(compiled)
+            compiles = 1
+        elif mode == "scan":
+            lowered = build_lowered(False, 1)
+            compiled = lowered.compile()
+            c1 = _counts(compiled)
+            flops, nbytes, coll = c1["flops"], c1["bytes"], c1["coll"]
+            mem_stats = _memory_stats(compiled)
+            compiles = 1
+        else:  # scan2: reconstruct total = base + reps*body from u1/u2
+            lowered = build_lowered(False, 1)
+            compiled = lowered.compile()
+            c1 = _counts(compiled)
+            mem_stats = _memory_stats(compiled)
+            compiles = 1
+            if reps > 1:
+                lowered2 = build_lowered(False, 2)
+                compiled2 = lowered2.compile()
+                c2 = _counts(compiled2)
+                compiles = 2
+
+                def corr(a, b):
+                    return a + max(reps - 1, 0) * max(b - a, 0.0)
+
+                flops = corr(c1["flops"], c2["flops"])
+                nbytes = corr(c1["bytes"], c2["bytes"])
+                kinds = set(c1["coll"]["bytes_by_kind"]) \
+                    | set(c2["coll"]["bytes_by_kind"])
+                by_kind = {k: corr(c1["coll"]["bytes_by_kind"].get(k, 0),
+                                   c2["coll"]["bytes_by_kind"].get(k, 0))
+                           for k in kinds}
+                coll = {"bytes_by_kind": by_kind,
+                        "total_bytes": sum(by_kind.values()),
+                        "num_collectives":
+                            c1["coll"]["num_collectives"]}
+            else:
+                flops, nbytes, coll = c1["flops"], c1["bytes"], c1["coll"]
+    t_total = time.time() - t0
+
+    # --- roofline terms (per §Roofline; post-SPMD HLO counts are
+    # per-device, i.e. already divided by `chips`) ---
+    t_compute = flops / PEAK_FLOPS
+    t_memory = nbytes / HBM_BW
+    t_coll = coll["total_bytes"] / ICI_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    useful = mf / (flops * chips) if flops else 0.0
+
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "x".join(map(str, mesh.devices.shape)),
+        "chips": chips, "remat": remat, "mode": mode,
+        "moe_impl": moe_impl if cfg.is_moe else None,
+        "window_override": window_override,
+        "wall_s": round(t_total, 1), "compiles": compiles,
+        "hlo_flops_per_device": flops,
+        "hlo_bytes_per_device": nbytes,
+        "collectives": coll,
+        "memory": mem_stats,
+        "roofline": {**{k: round(v, 6) for k, v in terms.items()},
+                     "dominant": dominant,
+                     "model_flops": f"{mf:.3e}",
+                     "useful_flop_frac": round(useful, 4)},
+    }
+    if verbose:
+        print(json.dumps(result, indent=1, default=str), flush=True)
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--remat", default="block", choices=["none", "block"])
+    ap.add_argument("--mode", default="scan2",
+                    choices=["scan2", "scan", "unroll"])
+    ap.add_argument("--moe-impl", default="sharded",
+                    choices=["sharded", "jit"])
+    ap.add_argument("--json", default=None, help="write results to file")
+    args = ap.parse_args(argv)
+
+    combos = []
+    if args.all:
+        for a in list_archs():
+            for s in SHAPES:
+                combos.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        combos = [(args.arch, args.shape)]
+
+    results = []
+    for a, s in combos:
+        print(f"=== dryrun {a} x {s} "
+              f"({'multi-pod 2x16x16' if args.multi_pod else '16x16'}) ===",
+              flush=True)
+        try:
+            results.append(dryrun_one(a, s, multi_pod=args.multi_pod,
+                                      remat=args.remat, mode=args.mode,
+                                      moe_impl=args.moe_impl))
+        except Exception as e:
+            results.append({"arch": a, "shape": s, "error": repr(e)})
+            print(f"FAILED: {e!r}", file=sys.stderr, flush=True)
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump(results, f, indent=1, default=str)
+    n_err = sum("error" in r for r in results)
+    print(f"\n{len(results)} combos: {n_err} errors, "
+          f"{sum('skipped' in r for r in results)} skipped")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

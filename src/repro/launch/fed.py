@@ -1,0 +1,145 @@
+"""Federated launcher: run the WPFed protocol at laptop scale (paper
+reproduction) or lower the round onto the production mesh with the
+client axis sharded over "data" (TPU scale-out — beyond-paper).
+
+    PYTHONPATH=src python -m repro.launch.fed --dataset mnist --rounds 10
+    PYTHONPATH=src python -m repro.launch.fed --dryrun   # 256-client mesh
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.paper_models import (FedConfig, PAPER_FED_OPTIMA,
+                                        aecg_tcn, mnist_cnn, seeg_tcn)
+from repro.core import evaluate, init_state, make_wpfed_round
+from repro.data import DATASETS
+from repro.models import apply_client_model, init_client_model
+from repro.optim import adam
+
+MODEL_FOR = {"mnist": mnist_cnn, "aecg": aecg_tcn, "seeg": seeg_tcn}
+
+
+def run_federation(dataset: str = "mnist", rounds: int = 10,
+                   num_clients: int = 0, seed: int = 0, fed: FedConfig = None,
+                   log=print):
+    ds_fn = DATASETS[dataset]
+    ds = ds_fn(seed=seed) if num_clients == 0 else \
+        ds_fn(num_clients=num_clients, seed=seed)
+    n_opt, alpha, gamma = PAPER_FED_OPTIMA[dataset]
+    fed = fed or FedConfig(num_clients=ds.num_clients, num_neighbors=n_opt,
+                           alpha=alpha, gamma=gamma, rounds=rounds)
+    mcfg = MODEL_FOR[dataset]()
+    apply_fn = functools.partial(apply_client_model, mcfg)
+    init_fn = lambda k: init_client_model(mcfg, k)
+    opt = adam(fed.lr)
+    data = {k: jnp.asarray(v) for k, v in ds.stacked().items()}
+    state = init_state(apply_fn, init_fn, opt, fed, jax.random.PRNGKey(seed))
+    round_fn = jax.jit(make_wpfed_round(apply_fn, opt, fed))
+    history = []
+    for r in range(rounds):
+        t0 = time.time()
+        state, metrics = round_fn(state, data)
+        ev = evaluate(apply_fn, state, data)
+        history.append({"round": r, "acc": float(ev["mean_acc"]),
+                        "loss": float(metrics["mean_loss"])})
+        log(f"round {r:3d} acc {float(ev['mean_acc']):.4f} "
+            f"loss {float(metrics['mean_loss']):.4f} "
+            f"({time.time() - t0:.1f}s)")
+    return state, history
+
+
+def dryrun_fed_round(num_clients: int = 256, arch: str = "phi3-medium-14b"):
+    """Beyond-paper: lower one WPFed round with 256 REDUCED-transformer
+    clients sharded over the production mesh's data axis — proves the
+    protocol itself scales out (the paper simulated <=40 clients on GPU).
+
+    Must be called in a fresh process with XLA_FLAGS set (see dryrun.py).
+    """
+    from repro.configs import get_config
+    from repro.launch.mesh import make_production_mesh
+    from repro.models.transformer import forward, init_params
+    from repro.sharding import named
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    cfg = get_config(arch).reduced()
+    fed = FedConfig(num_clients=num_clients, num_neighbors=8, top_k=4,
+                    local_steps=1, lsh_bits=128, ref_batch=8)
+    mesh = make_production_mesh()
+
+    def apply_fn(params, tokens):
+        logits, _ = forward(cfg, params, tokens)
+        return logits[:, -1, :]                     # classify-next-token
+
+    init_fn = functools.partial(init_params, cfg, dtype=jnp.bfloat16)
+    opt = adam(fed.lr)
+    round_fn = make_wpfed_round(apply_fn, opt, fed)
+
+    m, r, s = num_clients, 8, 32
+    sds = jax.ShapeDtypeStruct
+    key_sds = jax.random.PRNGKey(0)
+    state_sds = jax.eval_shape(
+        functools.partial(init_state, apply_fn, init_fn, opt, fed), key_sds)
+    data_sds = {
+        "x_train": sds((m, 64, s), jnp.int32),
+        "y_train": sds((m, 64), jnp.int32),
+        "x_ref": sds((m, r, s), jnp.int32),
+        "y_ref": sds((m, r), jnp.int32),
+    }
+    cl = P("data")                                  # client axis sharding
+
+    def spec_like(sd):
+        return NamedSharding(mesh, P("data", *([None] * (len(sd.shape) - 1))))
+
+    state_shard = jax.tree.map(spec_like, state_sds)
+    # scalars (rng, round) replicated
+    state_shard = state_shard._replace(
+        rng=NamedSharding(mesh, P()), round=NamedSharding(mesh, P()),
+        commitments=NamedSharding(mesh, P("data")))
+    data_shard = jax.tree.map(spec_like, data_sds)
+    with mesh:
+        lowered = jax.jit(round_fn,
+                          in_shardings=(state_shard, data_shard),
+                          out_shardings=None).lower(state_sds, data_sds)
+        compiled = lowered.compile()
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    print(json.dumps({
+        "fed_round_clients": m,
+        "client_arch": cfg.name,
+        "mesh": "16x16",
+        "flops_per_device": float(cost.get("flops", 0)),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+        "ok": True}, indent=1))
+    return compiled
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="mnist",
+                    choices=["mnist", "aecg", "seeg"])
+    ap.add_argument("--rounds", type=int, default=10)
+    ap.add_argument("--clients", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--dryrun", action="store_true",
+                    help="lower a 256-client WPFed round on the 16x16 mesh")
+    args = ap.parse_args(argv)
+    if args.dryrun:
+        import os
+        assert "xla_force_host_platform_device_count" in \
+            os.environ.get("XLA_FLAGS", ""), \
+            "run with XLA_FLAGS=--xla_force_host_platform_device_count=512"
+        dryrun_fed_round()
+        return
+    _, history = run_federation(args.dataset, args.rounds,
+                                num_clients=args.clients, seed=args.seed)
+    print(json.dumps(history[-3:], indent=1))
+
+
+if __name__ == "__main__":
+    main()

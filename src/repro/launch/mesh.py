@@ -1,0 +1,22 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (never module-level constants) so importing this
+module never touches jax device state — smoke tests must keep seeing a
+single CPU device; only launch/dryrun.py forces 512 host devices.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: v5e-256 as (data=16, model=16).
+    Multi-pod: 2 pods x 256 chips as (pod=2, data=16, model=16)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Degenerate 1x1 mesh for CPU tests (same axis names)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,88 @@
+"""Training driver for the transformer zoo.
+
+Runs REDUCED configs end-to-end on CPU (examples, smoke); FULL configs
+are exercised via launch/dryrun.py. Supports checkpoint/restore and the
+synthetic token pipeline.
+
+    PYTHONPATH=src python -m repro.launch.train --arch phi3-medium-14b \
+        --reduced --steps 50 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import checkpoint as ckpt
+from repro.configs import get_config
+from repro.data import TokenStream
+from repro.optim import adamw, linear_warmup_cosine
+from repro.train import init_train_state, make_train_step
+
+
+def train(arch: str, *, steps: int = 50, batch: int = 8, seq: int = 128,
+          lr: float = 3e-4, reduced: bool = True, ckpt_dir: str = "",
+          ckpt_every: int = 0, seed: int = 0, log_every: int = 10,
+          remat: str = "none"):
+    cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    stream = TokenStream(cfg, batch, seq, seed=seed)
+    opt = adamw(linear_warmup_cosine(lr, max(steps // 10, 1), steps),
+                weight_decay=0.1)
+    params, opt_state = init_train_state(cfg, opt, jax.random.PRNGKey(seed))
+
+    start = 0
+    if ckpt_dir and (last := ckpt.latest_step(ckpt_dir)) is not None:
+        params, opt_state = ckpt.restore(ckpt_dir, last,
+                                         (params, opt_state))
+        start = last
+        print(f"restored step {last} from {ckpt_dir}")
+
+    step_fn = jax.jit(make_train_step(cfg, opt, remat=remat))
+    history = []
+    t0 = time.time()
+    for step in range(start, steps):
+        batch_np = stream.next_batch()
+        batch_j = {k: jnp.asarray(v) for k, v in batch_np.items()}
+        params, opt_state, metrics = step_fn(params, opt_state, batch_j)
+        if step % log_every == 0 or step == steps - 1:
+            loss = float(metrics["loss"])
+            history.append({"step": step, "loss": loss,
+                            "grad_norm": float(metrics["grad_norm"])})
+            print(f"step {step:5d} loss {loss:8.4f} "
+                  f"gnorm {float(metrics['grad_norm']):7.3f} "
+                  f"({time.time() - t0:.1f}s)", flush=True)
+        if ckpt_dir and ckpt_every and (step + 1) % ckpt_every == 0:
+            ckpt.save(ckpt_dir, step + 1, (params, opt_state))
+    if ckpt_dir:
+        ckpt.save(ckpt_dir, steps, (params, opt_state))
+    return params, history
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--full", action="store_true",
+                    help="use the full (not reduced) config — CPU-hostile")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--remat", default="none", choices=["none", "block"])
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    _, history = train(args.arch, steps=args.steps, batch=args.batch,
+                       seq=args.seq, lr=args.lr, reduced=not args.full,
+                       ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+                       seed=args.seed, remat=args.remat)
+    print(json.dumps(history[-3:], indent=1))
+
+
+if __name__ == "__main__":
+    main()

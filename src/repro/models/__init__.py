@@ -1,0 +1,12 @@
+from repro.models.transformer import (  # noqa: F401
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    param_specs,
+    prefill,
+)
+from repro.models.client import (  # noqa: F401
+    apply_client_model,
+    init_client_model,
+)

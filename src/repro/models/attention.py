@@ -1,0 +1,281 @@
+"""GQA attention: global-causal / sliding-window / bidirectional / cross,
+with full-sequence (train, prefill) and single-token (decode) paths.
+
+KV caches are functional pytrees. Sliding-window decode uses a ring
+buffer of size ``window``: slot ``p % window`` holds position ``p``; keys
+are stored RoPE'd at their true position so relative attention is exact.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_rope, dense_init, split_keys
+
+NEG_INF = -1e30
+
+
+def init_attn(cfg: ModelConfig, key, dtype):
+    d, dh = cfg.d_model, cfg.resolved_head_dim
+    h, kv = cfg.num_heads, cfg.num_kv_heads
+    ks = split_keys(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, h * dh), dtype),
+        "wk": dense_init(ks[1], (d, kv * dh), dtype),
+        "wv": dense_init(ks[2], (d, kv * dh), dtype),
+        "wo": dense_init(ks[3], (h * dh, d), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * dh,), dtype)
+        p["bk"] = jnp.zeros((kv * dh,), dtype)
+        p["bv"] = jnp.zeros((kv * dh,), dtype)
+    return p
+
+
+def attn_specs(cfg: ModelConfig):
+    p = {
+        "wq": P(None, "model"),
+        "wk": P(None, "model"),
+        "wv": P(None, "model"),
+        "wo": P("model", None),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = P("model")
+        p["bk"] = P("model")
+        p["bv"] = P("model")
+    return p
+
+
+def _project_q(cfg, p, x):
+    h, dh = cfg.num_heads, cfg.resolved_head_dim
+    q = jnp.einsum("bsd,de->bse", x, p["wq"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+    return q.reshape(*x.shape[:2], h, dh)
+
+
+def _project_kv(cfg, p, x):
+    kv, dh = cfg.num_kv_heads, cfg.resolved_head_dim
+    k = jnp.einsum("bsd,de->bse", x, p["wk"])
+    v = jnp.einsum("bsd,de->bse", x, p["wv"])
+    if cfg.qkv_bias:
+        k, v = k + p["bk"], v + p["bv"]
+    return (k.reshape(*x.shape[:2], kv, dh),
+            v.reshape(*x.shape[:2], kv, dh))
+
+
+def _gqa_scores(cfg, q, k):
+    """q: (B,Sq,H,dh)  k: (B,Sk,KV,dh) -> scores (B,KV,G,Sq,Sk) in f32."""
+    h, kv = cfg.num_heads, cfg.num_kv_heads
+    g = h // kv
+    q = q.reshape(q.shape[0], q.shape[1], kv, g, q.shape[-1])
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", q.astype(jnp.float32),
+                        k.astype(jnp.float32))
+    return scores * (cfg.resolved_head_dim ** -0.5)
+
+
+def _gqa_out(cfg, p, probs, v, out_shape):
+    # (§Perf iteration 5 tried casting probs to bf16 here — REFUTED: the
+    # cast materializes an extra S^2 pass and XLA had already fused the
+    # f32 read into the matmul. Kept in f32.)
+    ctx = jnp.einsum("bkgqs,bskd->bqkgd", probs, v.astype(jnp.float32))
+    ctx = ctx.reshape(*out_shape[:2], cfg.num_heads * cfg.resolved_head_dim)
+    return jnp.einsum("bse,ed->bsd", ctx.astype(v.dtype), p["wo"])
+
+
+# Global attention implementation policy — a §Perf lever.
+#   "naive":   full (Sq, Sk) score tensor (fine for short sequences)
+#   "chunked": flash-style online-softmax over KV chunks (memory O(chunk^2))
+#   "auto":    chunked when Sq*Sk exceeds the threshold below.
+# §Perf iteration 6: threshold lowered from 4096^2 to 2048^2 — at
+# train_4k the materialized f32 probs made backward peak memory 147 GB
+# per device (9x over HBM); chunked attention brings the peak under HBM.
+_ATTN_IMPL = "auto"
+_CHUNK_Q = 1024
+_CHUNK_K = 1024
+_AUTO_THRESHOLD = 2048 * 2048
+
+
+def set_attn_impl(impl: str):
+    global _ATTN_IMPL
+    assert impl in ("auto", "naive", "chunked")
+    _ATTN_IMPL = impl
+
+
+def get_attn_impl() -> str:
+    return _ATTN_IMPL
+
+
+def _naive_attn(cfg, p, q, k, v, mode, window, out_shape):
+    scores = _gqa_scores(cfg, q, k)                       # (B,KV,G,Sq,Sk)
+    sq, sk = scores.shape[-2], scores.shape[-1]
+    if mode in ("causal", "window"):
+        i = jnp.arange(sq)[:, None]
+        j = jnp.arange(sk)[None, :]
+        mask = i >= j
+        if mode == "window":
+            mask &= (i - j) < window
+        scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return _gqa_out(cfg, p, probs, v, out_shape)
+
+
+def _chunked_attn(cfg, p, q, k, v, mode, window, out_shape):
+    """Flash-style attention: scan over KV chunks with an online softmax.
+
+    Peak live memory is O(B * KV * G * CHUNK_Q * CHUNK_K) instead of
+    O(B * KV * G * Sq * Sk).
+    """
+    h, kv_heads = cfg.num_heads, cfg.num_kv_heads
+    g = h // kv_heads
+    dh = cfg.resolved_head_dim
+    b, sq = q.shape[0], q.shape[1]
+    sk = k.shape[1]
+    cq = min(_CHUNK_Q, sq)
+    ck = min(_CHUNK_K, sk)
+    if sq % cq or sk % ck:
+        return _naive_attn(cfg, p, q, k, v, mode, window, out_shape)
+    nq, nk = sq // cq, sk // ck
+    scale = dh ** -0.5
+
+    qc = q.reshape(b, nq, cq, kv_heads, g, dh).astype(jnp.float32)
+    kc = jnp.moveaxis(k.reshape(b, nk, ck, kv_heads, dh), 1, 0)
+    vc = jnp.moveaxis(v.reshape(b, nk, ck, kv_heads, dh), 1, 0)
+
+    def q_block(qi, q_blk):
+        # online softmax over key chunks
+        acc0 = jnp.zeros((b, kv_heads, g, cq, dh), jnp.float32)
+        l0 = jnp.zeros((b, kv_heads, g, cq), jnp.float32)
+        m0 = jnp.full((b, kv_heads, g, cq), NEG_INF, jnp.float32)
+
+        def kv_block(carry, inp):
+            acc, l, m = carry
+            ki, k_blk, v_blk = inp
+            s = jnp.einsum("bqkgd,bskd->bkgqs", q_blk,
+                           k_blk.astype(jnp.float32)) * scale
+            if mode in ("causal", "window"):
+                qpos = qi * cq + jnp.arange(cq)[:, None]
+                kpos = ki * ck + jnp.arange(ck)[None, :]
+                msk = qpos >= kpos
+                if mode == "window":
+                    msk &= (qpos - kpos) < window
+                s = jnp.where(msk[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            pexp = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(pexp, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bskd->bkgqd", pexp, v_blk.astype(jnp.float32))
+            return (acc_new, l_new, m_new), None
+
+        (acc, l, _), _ = jax.lax.scan(
+            kv_block, (acc0, l0, m0), (jnp.arange(nk), kc, vc))
+        return acc / jnp.maximum(l, 1e-30)[..., None]     # (b,kv,g,cq,dh)
+
+    out = jax.lax.map(lambda i: q_block(i, qc[:, i]), jnp.arange(nq))
+    out = jnp.moveaxis(out, 0, 3)                         # (b,kv,g,nq,cq,dh)
+    ctx = out.reshape(b, kv_heads, g, sq, dh)
+    ctx = jnp.moveaxis(ctx.reshape(b, kv_heads * g, sq, dh), 1, 2)
+    ctx = ctx.reshape(b, sq, h * dh).astype(v.dtype)
+    return jnp.einsum("bse,ed->bsd", ctx, p["wo"])
+
+
+def attn_forward(cfg: ModelConfig, p, x, *, positions, mode: str,
+                 context=None, window: int = 0):
+    """Full-sequence attention.
+
+    mode: "causal" | "window" | "bidir" | "cross".
+    context: (B, Tc, D) for cross-attention.
+    Returns (out, (k, v)) so prefill can build the cache.
+    """
+    q = _project_q(cfg, p, x)
+    src = context if mode == "cross" else x
+    k, v = _project_kv(cfg, p, src)
+    if cfg.rope and mode != "cross":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    elif cfg.rope and mode == "cross":
+        q = apply_rope(q, positions, cfg.rope_theta)
+
+    sq, sk = q.shape[1], k.shape[1]
+    use_chunked = (_ATTN_IMPL == "chunked"
+                   or (_ATTN_IMPL == "auto" and sq * sk > _AUTO_THRESHOLD))
+    if use_chunked:
+        out = _chunked_attn(cfg, p, q, k, v, mode, window, x.shape)
+    else:
+        out = _naive_attn(cfg, p, q, k, v, mode, window, x.shape)
+    return out, (k, v)
+
+
+# ---------------------------------------------------------------------------
+# decode path
+# ---------------------------------------------------------------------------
+def init_attn_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype):
+    kv, dh = cfg.num_kv_heads, cfg.resolved_head_dim
+    return {"k": jnp.zeros((batch, cache_len, kv, dh), dtype),
+            "v": jnp.zeros((batch, cache_len, kv, dh), dtype)}
+
+
+def attn_cache_specs(cfg: ModelConfig, batch_axes):
+    s = P(batch_axes, None, "model", None)
+    return {"k": s, "v": s}
+
+
+def _ring_slot_positions(pos, cache_len):
+    """Position stored at each ring slot after writing token ``pos``.
+
+    slot i holds p = pos - ((pos - i) mod W); p < 0 means empty.
+    """
+    i = jnp.arange(cache_len)
+    return pos - jnp.mod(pos - i, cache_len)
+
+
+def attn_decode(cfg: ModelConfig, p, x, cache, pos, *, mode: str,
+                window: int = 0):
+    """One-token decode. x: (B, 1, D). pos: scalar int32 (current index).
+
+    mode "causal": cache slot i holds position i (cache_len >= pos+1).
+    mode "window": ring buffer, slot = pos % window.
+    mode "cross": cache holds precomputed context k/v; no write.
+    Returns (out, new_cache).
+    """
+    b = x.shape[0]
+    q = _project_q(cfg, p, x)
+    if cfg.rope:
+        q = apply_rope(q, jnp.full((b, 1), pos, jnp.int32), cfg.rope_theta)
+
+    if mode == "cross":
+        k, v = cache["k"], cache["v"]
+        scores = _gqa_scores(cfg, q, k)
+        probs = jax.nn.softmax(scores, axis=-1)
+        return _gqa_out(cfg, p, probs, v, x.shape), cache
+
+    k_new, v_new = _project_kv(cfg, p, x)                 # (B,1,KV,dh)
+    if cfg.rope:
+        k_new = apply_rope(k_new, jnp.full((b, 1), pos, jnp.int32),
+                           cfg.rope_theta)
+    cache_len = cache["k"].shape[1]
+    slot = jnp.mod(pos, cache_len) if mode == "window" else pos
+    k = jax.lax.dynamic_update_slice(
+        cache["k"], k_new.astype(cache["k"].dtype), (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(
+        cache["v"], v_new.astype(cache["v"].dtype), (0, slot, 0, 0))
+
+    scores = _gqa_scores(cfg, q, k)                       # (B,KV,G,1,Sc)
+    if mode == "window":
+        slot_pos = _ring_slot_positions(pos, cache_len)
+        valid = slot_pos >= 0
+    else:
+        valid = jnp.arange(cache_len) <= pos
+    scores = jnp.where(valid[None, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = _gqa_out(cfg, p, probs, v, x.shape)
+    return out, {"k": k, "v": v}
+
+
+def cross_kv(cfg: ModelConfig, p, context):
+    """Precompute cross-attention k/v from a context once per request."""
+    k, v = _project_kv(cfg, p, context)
+    return {"k": k, "v": v}

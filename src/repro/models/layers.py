@@ -1,0 +1,161 @@
+"""Shared layer primitives: norms, activations, MLPs, embeddings, RoPE."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+def dense_init(key, shape, dtype, scale: float | None = None):
+    """Truncated-normal fan-in init."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def split_keys(key, n):
+    return list(jax.random.split(key, n))
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def init_norm(cfg: ModelConfig, dtype):
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((cfg.d_model,), dtype),
+                "bias": jnp.zeros((cfg.d_model,), dtype)}
+    return {"scale": jnp.ones((cfg.d_model,), dtype)}
+
+
+def norm_specs(cfg: ModelConfig):
+    if cfg.norm == "layernorm":
+        return {"scale": P(None), "bias": P(None)}
+    return {"scale": P(None)}
+
+
+def apply_norm(cfg: ModelConfig, p, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# activations / MLP
+# ---------------------------------------------------------------------------
+def _act(name: str, x):
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    if name == "relu2":
+        r = jax.nn.relu(x)
+        return r * r
+    if name == "silu":
+        return jax.nn.silu(x)
+    raise ValueError(name)
+
+
+GATED = {"swiglu": "silu", "geglu": "gelu"}
+
+
+def init_mlp(cfg: ModelConfig, key, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = split_keys(key, 3)
+    p = {}
+    if cfg.activation in GATED:
+        p["wg"] = dense_init(ks[0], (d, f), dtype)
+    p["wi"] = dense_init(ks[1], (d, f), dtype)
+    p["wo"] = dense_init(ks[2], (f, d), dtype)
+    if cfg.mlp_bias:
+        p["bi"] = jnp.zeros((f,), dtype)
+        p["bo"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def mlp_specs(cfg: ModelConfig):
+    p = {}
+    if cfg.activation in GATED:
+        p["wg"] = P(None, "model")
+    p["wi"] = P(None, "model")
+    p["wo"] = P("model", None)
+    if cfg.mlp_bias:
+        p["bi"] = P("model")
+        p["bo"] = P(None)
+    return p
+
+
+def apply_mlp(cfg: ModelConfig, p, x):
+    h = jnp.einsum("...d,df->...f", x, p["wi"])
+    if cfg.mlp_bias:
+        h = h + p["bi"]
+    if cfg.activation in GATED:
+        g = _act(GATED[cfg.activation], jnp.einsum("...d,df->...f", x, p["wg"]))
+        h = g * h
+    else:
+        h = _act(cfg.activation, h)
+    out = jnp.einsum("...f,fd->...d", h, p["wo"])
+    if cfg.mlp_bias:
+        out = out + p["bo"]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# embeddings
+# ---------------------------------------------------------------------------
+def init_embed(cfg: ModelConfig, key, dtype):
+    ks = split_keys(key, 3)
+    p = {"tok": dense_init(ks[0], (cfg.vocab_size, cfg.d_model), dtype, scale=1.0)}
+    if cfg.learned_pos_embed:
+        p["pos"] = dense_init(ks[1], (cfg.learned_pos_embed, cfg.d_model), dtype,
+                              scale=0.02)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(ks[2], (cfg.d_model, cfg.vocab_size), dtype)
+    return p
+
+
+def embed_specs(cfg: ModelConfig):
+    p = {"tok": P("model", None)}
+    if cfg.learned_pos_embed:
+        p["pos"] = P(None, None)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = P(None, "model")
+    return p
+
+
+def embed_tokens(cfg: ModelConfig, p, tokens):
+    return p["tok"][tokens]
+
+
+def lm_logits(cfg: ModelConfig, p, x):
+    w = p["tok"].T if cfg.tie_embeddings else p["lm_head"]
+    return jnp.einsum("...d,dv->...v", x, w).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float):
+    return theta ** (-jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, dh); positions: (..., S) int32."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                        # (dh/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, dh/2)
+    cos = jnp.cos(ang)[..., :, None, :]                  # (..., S, 1, dh/2)
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)

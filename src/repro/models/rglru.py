@@ -1,0 +1,131 @@
+"""RG-LRU recurrent block (RecurrentGemma, arXiv:2402.19427).
+
+Block: x -> [linear_x -> causal depthwise conv1d -> RG-LRU] * gelu(linear_gate)
+         -> linear_out
+
+RG-LRU recurrence (real-gated linear recurrent unit):
+    r_t = sigmoid(u_t W_ra + b_ra)            # recurrence gate
+    i_t = sigmoid(u_t W_rx + b_rx)            # input gate
+    log a_t = -c * softplus(Lambda) * r_t     # c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+Training uses ``jax.lax.associative_scan`` over time (log-depth on TPU);
+decode is the one-step recurrence with (h, conv window) state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, split_keys
+
+_C = 8.0
+
+
+def init_rglru(cfg: ModelConfig, key, dtype):
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    cw = cfg.conv1d_width
+    ks = split_keys(key, 7)
+    return {
+        "w_in": dense_init(ks[0], (d, w), dtype),
+        "w_gate": dense_init(ks[1], (d, w), dtype),
+        "conv_w": dense_init(ks[2], (cw, w), dtype, scale=cw ** -0.5),
+        "conv_b": jnp.zeros((w,), dtype),
+        "w_ra": dense_init(ks[3], (w, w), dtype),
+        "b_ra": jnp.zeros((w,), dtype),
+        "w_rx": dense_init(ks[4], (w, w), dtype),
+        "b_rx": jnp.zeros((w,), dtype),
+        "lam": (jax.random.uniform(ks[5], (w,), jnp.float32, 0.9, 0.999)
+                ).astype(jnp.float32),   # a ≈ sigmoid-free direct param
+        "w_out": dense_init(ks[6], (w, d), dtype),
+    }
+
+
+def rglru_specs(cfg: ModelConfig):
+    return {
+        "w_in": P(None, "model"),
+        "w_gate": P(None, "model"),
+        "conv_w": P(None, "model"),
+        "conv_b": P("model"),
+        "w_ra": P(None, "model"),
+        "b_ra": P("model"),
+        "w_rx": P(None, "model"),
+        "b_rx": P("model"),
+        "lam": P("model"),
+        "w_out": P("model", None),
+    }
+
+
+def _conv1d_causal(u, w, b):
+    """Depthwise causal conv. u: (B,S,W), w: (cw,W)."""
+    cw = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (cw - 1, 0), (0, 0)))
+    out = jnp.zeros_like(u)
+    for j in range(cw):                                   # tiny unrolled loop
+        out = out + pad[:, j:j + u.shape[1], :] * w[cw - 1 - j]
+    return out + b
+
+
+def _gates(p, u):
+    r = jax.nn.sigmoid(jnp.einsum("...w,wv->...v", u, p["w_ra"]) + p["b_ra"])
+    i = jax.nn.sigmoid(jnp.einsum("...w,wv->...v", u, p["w_rx"]) + p["b_rx"])
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) \
+        * r.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    gated_in = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) \
+        * (i.astype(jnp.float32) * u.astype(jnp.float32))
+    return a, gated_in
+
+
+def rglru_forward(cfg: ModelConfig, p, x):
+    """Training / prefill path. x: (B,S,D) -> (out (B,S,D), state)."""
+    u = jnp.einsum("bsd,dw->bsw", x, p["w_in"])
+    u = _conv1d_causal(u, p["conv_w"], p["conv_b"])
+    a, gin = _gates(p, u)                                 # (B,S,W) f32
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    a_cum, h = jax.lax.associative_scan(combine, (a, gin), axis=1)
+    h = h.astype(x.dtype)
+
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["w_gate"]))
+    out = jnp.einsum("bsw,wd->bsd", h * gate, p["w_out"])
+    cw = cfg.conv1d_width
+    raw = jnp.einsum("bsd,dw->bsw", x, p["w_in"])
+    state = {"h": h[:, -1].astype(jnp.float32),
+             "conv": raw[:, -(cw - 1):, :] if cw > 1 else
+             jnp.zeros((x.shape[0], 0, raw.shape[-1]), raw.dtype)}
+    return out, state
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int, dtype):
+    w = cfg.lru_width or cfg.d_model
+    cw = cfg.conv1d_width
+    return {"h": jnp.zeros((batch, w), jnp.float32),
+            "conv": jnp.zeros((batch, cw - 1, w), dtype)}
+
+
+def rglru_state_specs(cfg: ModelConfig, batch_axes):
+    return {"h": P(batch_axes, "model"), "conv": P(batch_axes, None, "model")}
+
+
+def rglru_decode(cfg: ModelConfig, p, x, state):
+    """One-step decode. x: (B,1,D). state: {"h": (B,W), "conv": (B,cw-1,W)}."""
+    raw = jnp.einsum("bsd,dw->bsw", x, p["w_in"])         # (B,1,W)
+    hist = jnp.concatenate([state["conv"].astype(raw.dtype), raw], axis=1)
+    cw = cfg.conv1d_width
+    # training conv gives u_{t-k} weight w[k]; hist is oldest->newest so
+    # the kernel must be reversed here to match.
+    u = jnp.einsum("btw,tw->bw", hist, p["conv_w"][::-1]) + p["conv_b"]
+    a, gin = _gates(p, u)                                 # (B,W)
+    h = a * state["h"] + gin
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["w_gate"]))[:, 0]
+    out = jnp.einsum("bw,wd->bd", h.astype(x.dtype) * gate, p["w_out"])
+    new_state = {"h": h, "conv": hist[:, 1:, :]}
+    return out[:, None, :], new_state

@@ -1,0 +1,498 @@
+"""Model assembly: init / forward / prefill / decode for every family.
+
+Depth is organized as ``reps`` repetitions of ``cfg.block_pattern`` scanned
+with ``jax.lax.scan`` (stacked params, one compiled super-block — keeps
+HLO size flat in depth, as production frameworks do), plus an unrolled
+``tail`` for depths not divisible by the pattern length.
+
+Families:
+  dense / moe        "A" blocks (+ MoE FFN)
+  hybrid             ("R","R","L") RecurrentGemma pattern
+  ssm                ("S","M") xLSTM pattern
+  vlm                ("A"x4,"X") with a vision-patch projector (stub tower)
+  audio              encoder (bidir "A") + decoder ("A"+cross) — conv
+                     frontend stubbed: encoder input is frame embeddings
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import rglru, xlstm
+from repro.models.layers import (apply_mlp, apply_norm, dense_init,
+                                 embed_specs, embed_tokens, init_embed,
+                                 init_mlp, init_norm, lm_logits, mlp_specs,
+                                 norm_specs, split_keys)
+from repro.models.moe import init_moe, moe_forward, moe_specs
+
+Params = Dict[str, Any]
+
+
+# ===========================================================================
+# init
+# ===========================================================================
+def _block_has_mlp(cfg: ModelConfig, t: str) -> bool:
+    return cfg.d_ff > 0
+
+
+def init_block(cfg: ModelConfig, key, t: str, dtype, *, decoder: bool = False):
+    ks = split_keys(key, 4)
+    p: Params = {"ln": init_norm(cfg, dtype)}
+    if t in "ALX":
+        p["attn"] = attn.init_attn(cfg, ks[0], dtype)
+    elif t == "R":
+        p["rec"] = rglru.init_rglru(cfg, ks[0], dtype)
+    elif t == "S":
+        p["rec"] = xlstm.init_slstm(cfg, ks[0], dtype)
+    elif t == "M":
+        p["rec"] = xlstm.init_mlstm(cfg, ks[0], dtype)
+    if decoder and cfg.is_encdec:
+        p["ln_x"] = init_norm(cfg, dtype)
+        p["xattn"] = attn.init_attn(cfg, ks[2], dtype)
+    if _block_has_mlp(cfg, t):
+        p["ln2"] = init_norm(cfg, dtype)
+        p["mlp"] = (init_moe(cfg, ks[1], dtype) if cfg.is_moe
+                    else init_mlp(cfg, ks[1], dtype))
+    return p
+
+
+def block_specs(cfg: ModelConfig, t: str, *, decoder: bool = False):
+    p: Params = {"ln": norm_specs(cfg)}
+    if t in "ALX":
+        p["attn"] = attn.attn_specs(cfg)
+    elif t == "R":
+        p["rec"] = rglru.rglru_specs(cfg)
+    elif t == "S":
+        p["rec"] = xlstm.slstm_specs(cfg)
+    elif t == "M":
+        p["rec"] = xlstm.mlstm_specs(cfg)
+    if decoder and cfg.is_encdec:
+        p["ln_x"] = norm_specs(cfg)
+        p["xattn"] = attn.attn_specs(cfg)
+    if _block_has_mlp(cfg, t):
+        p["ln2"] = norm_specs(cfg)
+        p["mlp"] = moe_specs(cfg) if cfg.is_moe else mlp_specs(cfg)
+    return p
+
+
+def _stack_init(cfg, key, reps, pattern, dtype, decoder=False):
+    """Stacked per-pattern-position params: tuple over pattern positions,
+    each a pytree with leading (reps,) axis."""
+    out = []
+    for pi, t in enumerate(pattern):
+        keys = jnp.stack(split_keys(jax.random.fold_in(key, pi), reps))
+        out.append(jax.vmap(
+            lambda k, t=t: init_block(cfg, k, t, dtype, decoder=decoder)
+        )(keys))
+    return tuple(out)
+
+
+def _add_layer_dim(spec_tree):
+    return jax.tree.map(lambda s: P(None, *s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.float32) -> Params:
+    ks = split_keys(key, 6)
+    params: Params = {"embed": init_embed(cfg, ks[0], dtype)}
+    pattern = cfg.block_pattern
+    reps, tail = cfg.pattern_reps, cfg.pattern_tail
+    decoder = cfg.is_encdec
+    if reps > 0:
+        params["layers"] = _stack_init(cfg, ks[1], reps, pattern, dtype,
+                                       decoder=decoder)
+    params["tail"] = tuple(
+        init_block(cfg, jax.random.fold_in(ks[2], i), pattern[i], dtype,
+                   decoder=decoder)
+        for i in range(tail))
+    params["final_norm"] = init_norm(cfg, dtype)
+    if cfg.is_encdec:
+        enc_reps = cfg.encoder_layers
+        params["encoder"] = {
+            "pos": dense_init(ks[3], (cfg.encoder_seq_len, cfg.d_model),
+                              dtype, scale=0.02),
+            "layers": _stack_init(cfg, ks[4], enc_reps, ("A",), dtype),
+            "final_norm": init_norm(cfg, dtype),
+        }
+    if cfg.vision_tokens:
+        params["vision_proj"] = dense_init(
+            ks[5], (cfg.vision_dim or cfg.d_model, cfg.d_model), dtype)
+    return params
+
+
+def param_specs(cfg: ModelConfig) -> Params:
+    pattern = cfg.block_pattern
+    reps, tail = cfg.pattern_reps, cfg.pattern_tail
+    decoder = cfg.is_encdec
+    specs: Params = {"embed": embed_specs(cfg)}
+    if reps > 0:
+        specs["layers"] = tuple(
+            _add_layer_dim(block_specs(cfg, t, decoder=decoder))
+            for t in pattern)
+    specs["tail"] = tuple(block_specs(cfg, pattern[i], decoder=decoder)
+                          for i in range(tail))
+    specs["final_norm"] = norm_specs(cfg)
+    if cfg.is_encdec:
+        specs["encoder"] = {
+            "pos": P(None, None),
+            "layers": tuple([_add_layer_dim(block_specs(cfg, "A"))]),
+            "final_norm": norm_specs(cfg),
+        }
+    if cfg.vision_tokens:
+        specs["vision_proj"] = P(None, "model")
+    return specs
+
+
+# ===========================================================================
+# full-sequence forward (train / prefill)
+# ===========================================================================
+def _apply_block(cfg: ModelConfig, t: str, p, x, *, positions, context,
+                 window_override: int = 0, collect_kv: bool = False):
+    """Returns (x, aux_loss, kv_or_state) — kv/state only if collect_kv."""
+    h = apply_norm(cfg, p["ln"], x)
+    kv_state = None
+    if t in "AL":
+        mode = "causal" if (t == "A" and not window_override) else "window"
+        if cfg.is_encdec and t == "A" and context is None:
+            mode = "bidir"                                 # encoder block
+        win = window_override or cfg.window
+        out, kv = attn.attn_forward(cfg, p["attn"], h, positions=positions,
+                                    mode=mode, window=win)
+        kv_state = kv
+    elif t == "X":
+        out, _ = attn.attn_forward(cfg, p["attn"], h, positions=positions,
+                                   mode="cross", context=context)
+    elif t == "R":
+        out, kv_state = rglru.rglru_forward(cfg, p["rec"], h)
+    elif t == "S":
+        out, kv_state = xlstm.slstm_forward(cfg, p["rec"], h)
+    elif t == "M":
+        out, kv_state = xlstm.mlstm_forward(cfg, p["rec"], h)
+    x = x + out
+    if "xattn" in p and context is not None:               # enc-dec decoder
+        hx = apply_norm(cfg, p["ln_x"], x)
+        out, _ = attn.attn_forward(cfg, p["xattn"], hx, positions=positions,
+                                   mode="cross", context=context)
+        x = x + out
+    aux = jnp.zeros((), jnp.float32)
+    if "mlp" in p:
+        h2 = apply_norm(cfg, p["ln2"], x)
+        if cfg.is_moe:
+            out, moe_aux = moe_forward(cfg, p["mlp"], h2)
+            aux = moe_aux["load_balance"]
+        else:
+            out = apply_mlp(cfg, p["mlp"], h2)
+        x = x + out
+    if collect_kv:
+        return x, aux, kv_state
+    return x, aux, None
+
+
+def _run_stack(cfg: ModelConfig, params, x, *, positions, context,
+               pattern, window_override=0, remat: str = "none",
+               unroll: bool = False, scan_unroll: int = 1):
+    """Scan over reps (or an unrolled python loop when ``unroll`` — used
+    by the dry-run so cost_analysis counts every layer, since XLA's cost
+    model tallies while-loop bodies only once), then the tail.
+    Returns (x, aux_sum)."""
+    def rep_body(xc, layer_slices):
+        aux_t = jnp.zeros((), jnp.float32)
+        for pi, t in enumerate(pattern):
+            xc, aux, _ = _apply_block(cfg, t, layer_slices[pi], xc,
+                                      positions=positions, context=context,
+                                      window_override=window_override)
+            aux_t += aux
+        return xc, aux_t
+
+    if remat == "block":
+        rep_body = jax.checkpoint(rep_body)
+
+    aux_total = jnp.zeros((), jnp.float32)
+    if "layers" in params:
+        if unroll:
+            reps = jax.tree.leaves(params["layers"])[0].shape[0]
+            for r in range(reps):
+                sl = jax.tree.map(lambda a: a[r], params["layers"])
+                x, aux = rep_body(x, sl)
+                aux_total += aux
+        else:
+            x, auxs = jax.lax.scan(rep_body, x, params["layers"],
+                                   unroll=scan_unroll)
+            aux_total += jnp.sum(auxs)
+    for i, bp in enumerate(params.get("tail", ())):
+        x, aux, _ = _apply_block(cfg, pattern[i], bp, x, positions=positions,
+                                 context=context,
+                                 window_override=window_override)
+        aux_total += aux
+    return x, aux_total
+
+
+def encode_audio(cfg: ModelConfig, params, frames, *, unroll: bool = False,
+                 scan_unroll: int = 1):
+    """Stubbed-frontend encoder: frames (B, enc_seq, D) -> (B, enc_seq, D)."""
+    enc = params["encoder"]
+    x = frames + enc["pos"][None, :frames.shape[1], :]
+    pos = jnp.broadcast_to(jnp.arange(frames.shape[1]), frames.shape[:2])
+    x, _ = _run_stack(cfg, {"layers": enc["layers"], "tail": ()}, x,
+                      positions=pos, context=None, pattern=("A",),
+                      unroll=unroll, scan_unroll=scan_unroll)
+    return apply_norm(cfg, enc["final_norm"], x)
+
+
+def _context_from_extra(cfg: ModelConfig, params, extra, *,
+                        unroll: bool = False, scan_unroll: int = 1):
+    if cfg.is_encdec:
+        return encode_audio(cfg, params, extra["audio"], unroll=unroll,
+                            scan_unroll=scan_unroll)
+    if cfg.vision_tokens:
+        return jnp.einsum("btv,vd->btd", extra["vision"],
+                          params["vision_proj"])
+    return None
+
+
+def forward(cfg: ModelConfig, params: Params, tokens, extra=None, *,
+            window_override: int = 0, remat: str = "none",
+            unroll: bool = False, scan_unroll: int = 1):
+    """tokens: (B, S) int32 -> (logits (B,S,V) f32, aux_loss scalar)."""
+    b, s = tokens.shape
+    x = embed_tokens(cfg, params["embed"], tokens)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    if cfg.learned_pos_embed:
+        idx = jnp.minimum(jnp.arange(s), cfg.learned_pos_embed - 1)
+        x = x + params["embed"]["pos"][idx][None]
+    context = _context_from_extra(cfg, params, extra, unroll=unroll,
+                                  scan_unroll=scan_unroll)
+    x, aux = _run_stack(cfg, params, x, positions=positions, context=context,
+                        pattern=cfg.block_pattern,
+                        window_override=window_override, remat=remat,
+                        unroll=unroll, scan_unroll=scan_unroll)
+    x = apply_norm(cfg, params["final_norm"], x)
+    return lm_logits(cfg, params["embed"], x), aux
+
+
+# ===========================================================================
+# decode: cache init + single-token step
+# ===========================================================================
+def _block_cache_init(cfg, t, p, batch, cache_len, dtype, context, *,
+                      window_override=0):
+    c: Params = {}
+    if t in "AL" and not (cfg.is_encdec and context is None):
+        win = window_override or cfg.window
+        size = min(win, cache_len) if (t == "L" or window_override) \
+            else cache_len
+        c["kv"] = attn.init_attn_cache(cfg, batch, size, dtype)
+    elif t == "X":
+        c["kv"] = attn.cross_kv(cfg, p["attn"], context)
+    elif t == "R":
+        c["state"] = rglru.init_rglru_state(cfg, batch, dtype)
+    elif t == "S":
+        c["state"] = xlstm.init_slstm_state(cfg, batch)
+    elif t == "M":
+        c["state"] = xlstm.init_mlstm_state(cfg, batch)
+    if "xattn" in p and context is not None:
+        c["cross"] = attn.cross_kv(cfg, p["xattn"], context)
+    return c
+
+
+def init_cache(cfg: ModelConfig, params: Params, batch: int, cache_len: int,
+               dtype=jnp.float32, extra=None, *, window_override: int = 0):
+    """Build an empty decode cache (cross-attention K/V precomputed)."""
+    context = _context_from_extra(cfg, params, extra)
+    pattern = cfg.block_pattern
+    cache: Params = {}
+    if "layers" in params:
+        cache["layers"] = tuple(
+            jax.vmap(lambda bp, t=t: _block_cache_init(
+                cfg, t, bp, batch, cache_len, dtype, context,
+                window_override=window_override))(params["layers"][pi])
+            for pi, t in enumerate(pattern))
+    cache["tail"] = tuple(
+        _block_cache_init(cfg, pattern[i], bp, batch, cache_len, dtype,
+                          context, window_override=window_override)
+        for i, bp in enumerate(params.get("tail", ())))
+    return cache
+
+
+def _block_decode(cfg, t, p, x, c, pos, *, window_override=0):
+    h = apply_norm(cfg, p["ln"], x)
+    new_c = dict(c)
+    if t in "AL":
+        if t == "A" and not window_override:
+            mode, win = "causal", 0
+        else:
+            mode, win = "window", (window_override or cfg.window)
+        out, kv = attn.attn_decode(cfg, p["attn"], h, c["kv"], pos,
+                                   mode=mode, window=win)
+        new_c["kv"] = kv
+    elif t == "X":
+        out, _ = attn.attn_decode(cfg, p["attn"], h, c["kv"], pos,
+                                  mode="cross")
+    elif t == "R":
+        out, st = rglru.rglru_decode(cfg, p["rec"], h, c["state"])
+        new_c["state"] = st
+    elif t == "S":
+        out, st = xlstm.slstm_decode(cfg, p["rec"], h, c["state"])
+        new_c["state"] = st
+    elif t == "M":
+        out, st = xlstm.mlstm_decode(cfg, p["rec"], h, c["state"])
+        new_c["state"] = st
+    x = x + out
+    if "cross" in c:
+        hx = apply_norm(cfg, p["ln_x"], x)
+        out, _ = attn.attn_decode(cfg, p["xattn"], hx, c["cross"], pos,
+                                  mode="cross")
+        x = x + out
+    if "mlp" in p:
+        h2 = apply_norm(cfg, p["ln2"], x)
+        if cfg.is_moe:
+            out, _ = moe_forward(cfg, p["mlp"], h2)
+        else:
+            out = apply_mlp(cfg, p["mlp"], h2)
+        x = x + out
+    return x, new_c
+
+
+def decode_step(cfg: ModelConfig, params: Params, cache: Params, token,
+                pos, *, window_override: int = 0, unroll: bool = False,
+                scan_unroll: int = 1):
+    """token: (B,) int32, pos: scalar int32 -> (logits (B,V), new_cache)."""
+    x = embed_tokens(cfg, params["embed"], token[:, None])
+    if cfg.learned_pos_embed:
+        idx = jnp.minimum(pos, cfg.learned_pos_embed - 1)
+        x = x + params["embed"]["pos"][idx][None, None]
+    pattern = cfg.block_pattern
+    new_cache: Params = {}
+
+    if "layers" in params:
+        def rep_body(xc, slices):
+            new_slices = []
+            for pi, t in enumerate(pattern):
+                xc, nc = _block_decode(cfg, t, slices[0][pi], xc,
+                                       slices[1][pi], pos,
+                                       window_override=window_override)
+                new_slices.append(nc)
+            return xc, tuple(new_slices)
+
+        if unroll:
+            reps = jax.tree.leaves(params["layers"])[0].shape[0]
+            ys = []
+            for r in range(reps):
+                sl = jax.tree.map(lambda a: a[r],
+                                  (params["layers"], cache["layers"]))
+                x, nc = rep_body(x, sl)
+                ys.append(nc)
+            new_cache["layers"] = jax.tree.map(
+                lambda *zs: jnp.stack(zs), *ys)
+        else:
+            x, new_layer_cache = jax.lax.scan(
+                rep_body, x, (params["layers"], cache["layers"]),
+                unroll=scan_unroll)
+            new_cache["layers"] = new_layer_cache
+    new_tail = []
+    for i, bp in enumerate(params.get("tail", ())):
+        x, nc = _block_decode(cfg, pattern[i], bp, x, cache["tail"][i], pos,
+                              window_override=window_override)
+        new_tail.append(nc)
+    new_cache["tail"] = tuple(new_tail)
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = lm_logits(cfg, params["embed"], x)[:, 0]
+    return logits, new_cache
+
+
+# ===========================================================================
+# prefill: full forward that also returns a usable decode cache
+# ===========================================================================
+def prefill(cfg: ModelConfig, params: Params, tokens, extra=None, *,
+            window_override: int = 0, cache_len: int = 0,
+            unroll: bool = False, scan_unroll: int = 1):
+    """Returns (last-position logits (B,V), cache positioned at pos=S).
+
+    ``cache_len`` (default: S) sizes the full-attention KV caches so the
+    subsequent decode steps have room: pass S + max_new_tokens.
+    """
+    b, s = tokens.shape
+    x = embed_tokens(cfg, params["embed"], tokens)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    if cfg.learned_pos_embed:
+        idx = jnp.minimum(jnp.arange(s), cfg.learned_pos_embed - 1)
+        x = x + params["embed"]["pos"][idx][None]
+    context = _context_from_extra(cfg, params, extra, unroll=unroll,
+                                  scan_unroll=scan_unroll)
+    pattern = cfg.block_pattern
+    full_len = max(cache_len, s)
+
+    def pad_full(k):
+        """Grow a (B,S,KV,dh) tensor to (B,full_len,KV,dh) with zeros."""
+        if full_len == s:
+            return k
+        return jnp.pad(k, ((0, 0), (0, full_len - s), (0, 0), (0, 0)))
+
+    def ring_pack(k, win):
+        """Pack the last `win` positions into ring layout (slot = p % win)."""
+        if s < win:                       # identity slots + zero tail
+            return jnp.pad(k, ((0, 0), (0, win - s), (0, 0), (0, 0)))
+        i = jnp.arange(win)
+        slot_pos = (s - 1) - jnp.mod((s - 1) - i, win)
+        return jnp.take(k, slot_pos, axis=1)
+
+    def block_with_cache(t, p, xc):
+        xc, aux, kv_state = _apply_block(
+            cfg, t, p, xc, positions=positions, context=context,
+            window_override=window_override, collect_kv=True)
+        c: Params = {}
+        if t in "AL" and kv_state is not None:
+            k, v = kv_state
+            win = window_override or cfg.window
+            if t == "L" or window_override:
+                c["kv"] = {"k": ring_pack(k, win), "v": ring_pack(v, win)}
+            else:
+                c["kv"] = {"k": pad_full(k), "v": pad_full(v)}
+        elif t == "X":
+            c["kv"] = attn.cross_kv(cfg, p["attn"], context)
+        elif t in "RSM":
+            c["state"] = kv_state
+        if "xattn" in p and context is not None:
+            c["cross"] = attn.cross_kv(cfg, p["xattn"], context)
+        return xc, aux, c
+
+    cache: Params = {}
+    aux_total = jnp.zeros((), jnp.float32)
+    if "layers" in params:
+        def rep_body(xc, layer_slices):
+            caches, aux_t = [], jnp.zeros((), jnp.float32)
+            for pi, t in enumerate(pattern):
+                xc, aux, c = block_with_cache(t, layer_slices[pi], xc)
+                caches.append(c)
+                aux_t += aux
+            return xc, (tuple(caches), aux_t)
+
+        if unroll:
+            reps = jax.tree.leaves(params["layers"])[0].shape[0]
+            ys = []
+            for r in range(reps):
+                sl = jax.tree.map(lambda a: a[r], params["layers"])
+                x, (cs, aux) = rep_body(x, sl)
+                ys.append(cs)
+                aux_total += aux
+            cache["layers"] = jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
+        else:
+            x, (layer_caches, auxs) = jax.lax.scan(rep_body, x,
+                                                   params["layers"],
+                                                   unroll=scan_unroll)
+            cache["layers"] = layer_caches
+            aux_total += jnp.sum(auxs)
+    tail_caches = []
+    for i, bp in enumerate(params.get("tail", ())):
+        x, aux, c = block_with_cache(pattern[i], bp, x)
+        tail_caches.append(c)
+        aux_total += aux
+    cache["tail"] = tuple(tail_caches)
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = lm_logits(cfg, params["embed"], x[:, -1:, :])[:, 0]
+    return logits, cache

@@ -1,0 +1,242 @@
+"""xLSTM blocks (arXiv:2405.04517): sLSTM (scalar memory, nonlinear
+state-mixing recurrence) and mLSTM (matrix memory, attention-like
+parallel training form).
+
+Training:
+  - sLSTM: stabilized exponential gating, sequential ``lax.scan`` over
+    time (the recurrence is nonlinear -> no associative form exists).
+  - mLSTM: stabilized quadratic parallel form (decay matrix D from
+    cumulative log forget gates), O(S^2) like attention; decode is the
+    O(1) recurrent update on the (C, n, m) state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, split_keys
+
+NEG_INF = -1e30
+
+
+# ===========================================================================
+# sLSTM
+# ===========================================================================
+def init_slstm(cfg: ModelConfig, key, dtype):
+    d, h = cfg.d_model, cfg.num_heads
+    dh = d // h
+    ks = split_keys(key, 3)
+    return {
+        "w": dense_init(ks[0], (4, d, d), dtype),          # i,f,z,o input
+        "r": dense_init(ks[1], (4, h, dh, dh), dtype),     # block-diag recur
+        "b": jnp.zeros((4, d), dtype),
+        "w_out": dense_init(ks[2], (d, d), dtype),
+    }
+
+
+def slstm_specs(cfg: ModelConfig):
+    # tiny model (<=350M): replicated (data-parallel only); see DESIGN.md
+    return {"w": P(None, None, None), "r": P(None, None, None, None),
+            "b": P(None, None), "w_out": P(None, None)}
+
+
+def _slstm_step(cfg, p, state, wx_t):
+    """state: (h, c, n, m) each (B, D) f32; wx_t: (4, B, D) precomputed Wx."""
+    h_prev, c_prev, n_prev, m_prev = state
+    hh = h_prev.reshape(h_prev.shape[0], cfg.num_heads, -1)
+    rec = jnp.einsum("bhe,ghef->gbhf", hh, p["r"].astype(jnp.float32))
+    rec = rec.reshape(4, h_prev.shape[0], -1)
+    pre = wx_t + rec + p["b"].astype(jnp.float32)[:, None, :]
+    i_t, f_t, z_t, o_t = pre[0], pre[1], pre[2], pre[3]
+    m_t = jnp.maximum(f_t + m_prev, i_t)
+    i_g = jnp.exp(i_t - m_t)
+    f_g = jnp.exp(f_t + m_prev - m_t)
+    c_t = f_g * c_prev + i_g * jnp.tanh(z_t)
+    n_t = f_g * n_prev + i_g
+    h_t = jax.nn.sigmoid(o_t) * c_t / jnp.maximum(n_t, 1e-6)
+    return (h_t, c_t, n_t, m_t)
+
+
+def slstm_forward(cfg: ModelConfig, p, x, state=None):
+    """x: (B,S,D) -> (out, final_state)."""
+    b, s, d = x.shape
+    if state is None:
+        state = init_slstm_state(cfg, b)
+    wx = jnp.einsum("bsd,gde->gbse", x.astype(jnp.float32),
+                    p["w"].astype(jnp.float32))            # (4,B,S,D)
+
+    def step(carry, wx_t):
+        new = _slstm_step(cfg, p, carry, wx_t)
+        return new, new[0]
+
+    state, hs = jax.lax.scan(step, state, jnp.moveaxis(wx, 2, 0))
+    hs = jnp.moveaxis(hs, 0, 1).astype(x.dtype)            # (B,S,D)
+    out = jnp.einsum("bsd,de->bse", hs, p["w_out"])
+    return out, state
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return (z, z, z, z - 30.0)                             # m init low
+
+
+def slstm_state_specs(cfg: ModelConfig, batch_axes):
+    s = P(batch_axes, None)
+    return (s, s, s, s)
+
+
+def slstm_decode(cfg: ModelConfig, p, x, state):
+    """x: (B,1,D)."""
+    wx = jnp.einsum("bd,gde->gbe", x[:, 0].astype(jnp.float32),
+                    p["w"].astype(jnp.float32))
+    state = _slstm_step(cfg, p, state, wx)
+    out = jnp.einsum("bd,de->be", state[0].astype(x.dtype), p["w_out"])
+    return out[:, None, :], state
+
+
+# ===========================================================================
+# mLSTM
+# ===========================================================================
+def init_mlstm(cfg: ModelConfig, key, dtype):
+    d = cfg.d_model
+    di = 2 * d                                             # inner width
+    ks = split_keys(key, 7)
+    return {
+        "w_up": dense_init(ks[0], (d, di), dtype),
+        "w_z": dense_init(ks[1], (d, di), dtype),          # gate branch
+        "w_q": dense_init(ks[2], (di, di), dtype),
+        "w_k": dense_init(ks[3], (di, di), dtype),
+        "w_v": dense_init(ks[4], (di, di), dtype),
+        "w_if": dense_init(ks[5], (di, 2 * cfg.num_heads), dtype, scale=0.01),
+        "b_if": jnp.zeros((2 * cfg.num_heads,), jnp.float32),
+        "w_down": dense_init(ks[6], (di, d), dtype),
+    }
+
+
+def mlstm_specs(cfg: ModelConfig):
+    return {"w_up": P(None, None), "w_z": P(None, None), "w_q": P(None, None),
+            "w_k": P(None, None), "w_v": P(None, None),
+            "w_if": P(None, None), "b_if": P(None),
+            "w_down": P(None, None)}
+
+
+def _mlstm_qkv_gates(cfg, p, x):
+    u = jnp.einsum("bsd,de->bse", x, p["w_up"])
+    b, s, di = u.shape
+    h = cfg.num_heads
+    dh = di // h
+
+    def heads(w):
+        return jnp.einsum("bse,ef->bsf", u, w).reshape(b, s, h, dh)
+
+    q, k, v = heads(p["w_q"]), heads(p["w_k"]), heads(p["w_v"])
+    gates = jnp.einsum("bse,eg->bsg", u.astype(jnp.float32),
+                       p["w_if"].astype(jnp.float32)) + p["b_if"]
+    log_i = gates[..., :h]                                 # (B,S,H)
+    log_f = jax.nn.log_sigmoid(gates[..., h:])             # (B,S,H)
+    z = jax.nn.silu(jnp.einsum("bsd,de->bse", x, p["w_z"]))
+    return u, q, k, v, log_i, log_f, z, dh
+
+
+MLSTM_CHUNK = 256
+
+
+def mlstm_forward(cfg: ModelConfig, p, x, state=None):
+    """Chunkwise-parallel stabilized form: intra-chunk quadratic +
+    inter-chunk recurrent (C, n, m) state — peak memory O(B*L^2*H) per
+    chunk of length L instead of O(B*S^2*H). x: (B,S,D)."""
+    u, q, k, v, log_i, log_f, z, dh = _mlstm_qkv_gates(cfg, p, x)
+    b, s, h, _ = q.shape
+    if state is None:
+        state = init_mlstm_state(cfg, b)
+    L = MLSTM_CHUNK if s % MLSTM_CHUNK == 0 else s         # fallback: 1 chunk
+    nc = s // L
+    scale = dh ** -0.5
+
+    def to_chunks(a):
+        return jnp.moveaxis(a.reshape(b, nc, L, *a.shape[2:]), 1, 0)
+
+    qc, kc, vc = (to_chunks(a.astype(jnp.float32)) for a in (q, k, v))
+    lic, lfc = to_chunks(log_i), to_chunks(log_f)          # (nc,B,L,H)
+
+    causal = jnp.tril(jnp.ones((L, L), bool))
+
+    def chunk_step(carry, inp):
+        C_p, n_p, m_p = carry                              # prev state
+        q_b, k_b, v_b, li, lf = inp
+        fcs = jnp.cumsum(lf, axis=1)                       # (B,L,H) inclusive
+        ftot = fcs[:, -1]                                  # (B,H)
+        # intra-chunk decay  D[t,τ] = fcs[t] - fcs[τ] + li[τ]
+        dmat = fcs[:, :, None, :] - fcs[:, None, :, :] + li[:, None, :, :]
+        dmat = jnp.where(causal[None, :, :, None], dmat, NEG_INF)
+        # prior-state log scale at position t:  b_t = fcs[t] + m_prev
+        b_t = fcs + m_p[:, None, :]                        # (B,L,H)
+        m_t = jnp.maximum(jnp.max(dmat, axis=2), b_t)      # (B,L,H)
+        dexp = jnp.exp(dmat - m_t[:, :, None, :])
+        inter_w = jnp.exp(b_t - m_t)                       # (B,L,H)
+
+        scores = jnp.einsum("bthd,bshd->btsh", q_b, k_b) * scale
+        num_intra = jnp.einsum("btsh,btsh,bshe->bthe", scores, dexp, v_b)
+        num_inter = inter_w[..., None] * jnp.einsum(
+            "bhde,bthd->bthe", C_p, q_b) * scale
+        den_intra = jnp.einsum("btsh,btsh->bth", scores, dexp)
+        den_inter = inter_w * jnp.einsum("bhd,bthd->bth", n_p, q_b) * scale
+        den = jnp.maximum(jnp.abs(den_intra + den_inter), jnp.exp(-m_t))
+        h_out = (num_intra + num_inter) / den[..., None]   # (B,L,H,dh)
+
+        # state update to end of chunk
+        w_tau = ftot[:, None, :] - fcs + li                # (B,L,H)
+        m_new = jnp.maximum(m_p + ftot, jnp.max(w_tau, axis=1))
+        wexp = jnp.exp(w_tau - m_new[:, None, :])
+        decay = jnp.exp(m_p + ftot - m_new)                # (B,H)
+        C_new = decay[..., None, None] * C_p + jnp.einsum(
+            "bsh,bshd,bshe->bhde", wexp, k_b, v_b)
+        n_new = decay[..., None] * n_p + jnp.einsum(
+            "bsh,bshd->bhd", wexp, k_b)
+        return (C_new, n_new, m_new), h_out
+
+    carry0 = (state["C"], state["n"], state["m"])
+    (C_f, n_f, m_f), hs = jax.lax.scan(chunk_step, carry0,
+                                       (qc, kc, vc, lic, lfc))
+    out_h = jnp.moveaxis(hs, 0, 1).reshape(b, s, -1)       # (B,S,2D)
+    out_h = out_h.astype(x.dtype) * z
+    out = jnp.einsum("bse,ed->bsd", out_h, p["w_down"])
+    return out, {"C": C_f, "n": n_f, "m": m_f}
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int):
+    h = cfg.num_heads
+    dh = 2 * cfg.d_model // h
+    return {"C": jnp.zeros((batch, h, dh, dh), jnp.float32),
+            "n": jnp.zeros((batch, h, dh), jnp.float32),
+            "m": jnp.full((batch, h), -30.0, jnp.float32)}
+
+
+def mlstm_state_specs(cfg: ModelConfig, batch_axes):
+    return {"C": P(batch_axes, None, None, None),
+            "n": P(batch_axes, None, None),
+            "m": P(batch_axes, None)}
+
+
+def mlstm_decode(cfg: ModelConfig, p, x, state):
+    """O(1) recurrent update. x: (B,1,D)."""
+    u, q, k, v, log_i, log_f, z, dh = _mlstm_qkv_gates(cfg, p, x)
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]                    # (B,H,dh)
+    log_i, log_f = log_i[:, 0], log_f[:, 0]                # (B,H)
+    m_t = jnp.maximum(log_f + state["m"], log_i)
+    f_g = jnp.exp(log_f + state["m"] - m_t)[..., None]
+    i_g = jnp.exp(log_i - m_t)[..., None]
+    kf, vf, qf = (a.astype(jnp.float32) for a in (k, v, q))
+    C = f_g[..., None] * state["C"] + i_g[..., None] * kf[..., :, None] \
+        * vf[..., None, :]
+    n = f_g * state["n"] + i_g * kf
+    num = jnp.einsum("bhde,bhd->bhe", C, qf) * (dh ** -0.5)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, qf)) * (dh ** -0.5),
+                      jnp.exp(-m_t))
+    out_h = (num / den[..., None]).reshape(x.shape[0], -1)
+    out_h = out_h.astype(x.dtype) * z[:, 0]
+    out = jnp.einsum("be,ed->bd", out_h, p["w_down"])
+    return out[:, None, :], {"C": C, "n": n, "m": m_t}

@@ -1,0 +1,13 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer,
+    adam,
+    adamw,
+    apply_updates,
+    clip_by_global_norm,
+    sgd,
+)
+from repro.optim.schedules import (  # noqa: F401
+    constant,
+    cosine_decay,
+    linear_warmup_cosine,
+)

@@ -1,0 +1,29 @@
+"""Learning-rate schedules (callables: step -> lr)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_decay(lr: float, decay_steps: int, final_frac: float = 0.1):
+    def fn(step):
+        t = jnp.minimum(step.astype(jnp.float32), decay_steps) / decay_steps
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return lr * (final_frac + (1 - final_frac) * cos)
+    return fn
+
+
+def linear_warmup_cosine(lr: float, warmup_steps: int, decay_steps: int,
+                         final_frac: float = 0.1):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = lr * s / max(warmup_steps, 1)
+        t = jnp.clip((s - warmup_steps) / max(decay_steps - warmup_steps, 1),
+                     0.0, 1.0)
+        cos = lr * (final_frac + (1 - final_frac)
+                    * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(s < warmup_steps, warm, cos)
+    return fn

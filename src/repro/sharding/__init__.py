@@ -1,0 +1,8 @@
+from repro.sharding.rules import (  # noqa: F401
+    batch_axes,
+    batch_spec,
+    cache_specs,
+    named,
+    opt_state_specs,
+    train_batch_specs,
+)

@@ -1,0 +1,98 @@
+"""Sharding rules: PartitionSpec trees for params, optimizer states,
+batches, and decode caches, and helpers to bind them to a mesh.
+
+Conventions (DESIGN.md §6):
+  - batch / client axes shard over ("pod","data") when present, ("data",)
+    on a single pod;
+  - tensor parallelism shards heads / ffn / experts over "model";
+  - scanned layer stacks have an unsharded leading (reps,) axis.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import rglru, xlstm
+from repro.models.transformer import param_specs
+
+
+def batch_axes(mesh: Mesh):
+    """Mesh axes the global batch is sharded over."""
+    return (("pod", "data") if "pod" in mesh.axis_names else ("data",))
+
+
+def batch_spec(mesh: Mesh, *trailing) -> P:
+    return P(batch_axes(mesh), *trailing)
+
+
+def named(mesh: Mesh, spec_tree):
+    """PartitionSpec tree -> NamedSharding tree."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def opt_state_specs(cfg: ModelConfig):
+    """AdamW state: step replicated; m/v mirror the param specs."""
+    ps = param_specs(cfg)
+    return {"step": P(), "m": ps, "v": ps}
+
+
+def train_batch_specs(cfg: ModelConfig, mesh: Mesh):
+    b = batch_axes(mesh)
+    specs = {"tokens": P(b, None), "labels": P(b, None)}
+    if cfg.is_encdec:
+        specs["audio"] = P(b, None, None)
+    if cfg.vision_tokens:
+        specs["vision"] = P(b, None, None)
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# decode-cache specs (mirrors transformer.init_cache structure)
+# ---------------------------------------------------------------------------
+def _add_layer_dim(tree):
+    return jax.tree.map(lambda s: P(None, *s), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _block_cache_specs(cfg: ModelConfig, t: str, b, *, decoder: bool):
+    c = {}
+    if t in "AL" and not (cfg.is_encdec and not decoder):
+        c["kv"] = {"k": P(b, None, "model", None),
+                   "v": P(b, None, "model", None)}
+    elif t == "X":
+        c["kv"] = {"k": P(b, None, "model", None),
+                   "v": P(b, None, "model", None)}
+    elif t == "R":
+        c["state"] = rglru.rglru_state_specs(cfg, b)
+    elif t == "S":
+        c["state"] = xlstm.slstm_state_specs(cfg, b)
+    elif t == "M":
+        c["state"] = xlstm.mlstm_state_specs(cfg, b)
+    if decoder and cfg.is_encdec:
+        c["cross"] = {"k": P(b, None, "model", None),
+                      "v": P(b, None, "model", None)}
+    return c
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh):
+    b = batch_axes(mesh)
+    pattern = cfg.block_pattern
+    reps, tail = cfg.pattern_reps, cfg.pattern_tail
+    decoder = cfg.is_encdec
+    out = {}
+    if reps > 0:
+        out["layers"] = tuple(
+            _add_layer_dim(_block_cache_specs(cfg, t, b, decoder=decoder))
+            for t in pattern)
+    out["tail"] = tuple(
+        _block_cache_specs(cfg, pattern[i], b, decoder=decoder)
+        for i in range(tail))
+    return out

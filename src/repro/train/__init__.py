@@ -1,0 +1,8 @@
+from repro.train.steps import (  # noqa: F401
+    init_train_state,
+    lm_loss,
+    make_decode_cache,
+    make_prefill_step,
+    make_serve_step,
+    make_train_step,
+)

@@ -1,0 +1,133 @@
+"""Train / prefill / serve step builders for the transformer zoo.
+
+These are the functions the launcher lowers onto the production mesh
+(launch/dryrun.py) and executes at reduced scale in tests/examples.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import (decode_step, forward, init_cache,
+                                      init_params, prefill)
+from repro.optim.optimizers import Optimizer, apply_updates, clip_by_global_norm
+
+MOE_AUX_WEIGHT = 0.01
+
+
+def lm_loss(cfg: ModelConfig, params, batch, *, remat: str = "block",
+            window_override: int = 0, unroll: bool = False,
+            scan_unroll: int = 1):
+    extra = {k: batch[k] for k in ("audio", "vision") if k in batch}
+    logits, aux = forward(cfg, params, batch["tokens"], extra or None,
+                          remat=remat, window_override=window_override,
+                          unroll=unroll, scan_unroll=scan_unroll)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, batch["labels"][..., None],
+                               axis=-1)[..., 0]
+    ce = jnp.mean(nll)
+    return ce + MOE_AUX_WEIGHT * aux / max(cfg.num_layers, 1), (ce, aux)
+
+
+def make_train_step(cfg: ModelConfig, optimizer: Optimizer, *,
+                    remat: str = "block", grad_clip: float = 1.0,
+                    unroll: bool = False, scan_unroll: int = 1,
+                    grad_accum: int = 1):
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    grad_accum > 1 scans over microbatches accumulating f32 grads before
+    one optimizer update (§Perf iteration 7: peak activation memory
+    scales with the microbatch, letting shapes that exceed HBM fit).
+    """
+
+    def grad_fn(params, mb):
+        return jax.value_and_grad(
+            lambda p: lm_loss(cfg, p, mb, remat=remat, unroll=unroll,
+                              scan_unroll=scan_unroll),
+            has_aux=True)(params)
+
+    def train_step(params, opt_state, batch):
+        if grad_accum > 1:
+            micro = jax.tree.map(
+                lambda x: x.reshape(grad_accum, x.shape[0] // grad_accum,
+                                    *x.shape[1:]), batch)
+
+            def acc_step(carry, mb):
+                g_acc, l_acc, c_acc, a_acc = carry
+                (loss, (ce, aux)), g = grad_fn(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32) / grad_accum,
+                    g_acc, g)
+                return (g_acc, l_acc + loss / grad_accum,
+                        c_acc + ce / grad_accum,
+                        a_acc + aux / grad_accum), None
+
+            zeros = jax.tree.map(
+                lambda q: jnp.zeros(q.shape, jnp.float32), params)
+            (grads, loss, ce, aux), _ = jax.lax.scan(
+                acc_step, (zeros, jnp.float32(0), jnp.float32(0),
+                           jnp.float32(0)), micro)
+        else:
+            (loss, (ce, aux)), grads = grad_fn(params, batch)
+        if grad_clip:
+            grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        else:
+            gnorm = jnp.zeros((), jnp.float32)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        metrics = {"loss": loss, "ce": ce, "moe_aux": aux,
+                   "grad_norm": gnorm}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, *, window_override: int = 0,
+                      unroll: bool = False, scan_unroll: int = 1):
+    """(params, batch) -> (last logits (B,V), cache)."""
+
+    def prefill_step(params, batch):
+        extra = {k: batch[k] for k in ("audio", "vision") if k in batch}
+        return prefill(cfg, params, batch["tokens"], extra or None,
+                       window_override=window_override, unroll=unroll,
+                       scan_unroll=scan_unroll)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, *, window_override: int = 0,
+                    temperature: float = 0.0, unroll: bool = False,
+                    scan_unroll: int = 1):
+    """One decode step: (params, cache, token (B,), pos) ->
+    (next_token (B,), logits (B,V), new_cache)."""
+
+    def serve_step(params, cache, token, pos):
+        logits, cache = decode_step(cfg, params, cache, token, pos,
+                                    window_override=window_override,
+                                    unroll=unroll, scan_unroll=scan_unroll)
+        if temperature > 0:
+            key = jax.random.fold_in(jax.random.PRNGKey(0), pos)
+            nxt = jax.random.categorical(key, logits / temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(logits, axis=-1)
+        return nxt.astype(jnp.int32), logits, cache
+
+    return serve_step
+
+
+def init_train_state(cfg: ModelConfig, optimizer: Optimizer, key,
+                     dtype=jnp.float32):
+    params = init_params(cfg, key, dtype)
+    opt_state = optimizer.init(params)
+    return params, opt_state
+
+
+def make_decode_cache(cfg: ModelConfig, params, batch: int, cache_len: int,
+                      dtype=jnp.float32, extra=None, *,
+                      window_override: int = 0):
+    return init_cache(cfg, params, batch, cache_len, dtype, extra,
+                      window_override=window_override)

@@ -1,0 +1,92 @@
+"""Per-architecture smoke tests (deliverable f): a REDUCED variant of
+each family runs one forward + one train step on CPU; output shapes and
+finiteness asserted."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ALL_ARCHS, get_config
+from repro.data import modality_stub
+from repro.models import forward, init_params
+from repro.optim import adamw
+from repro.train import init_train_state, make_train_step
+
+B, S = 2, 16
+
+
+def _batch(cfg, rs):
+    batch = {
+        "tokens": jnp.asarray(rs.randint(0, cfg.vocab_size, (B, S)), jnp.int32),
+        "labels": jnp.asarray(rs.randint(0, cfg.vocab_size, (B, S)), jnp.int32),
+    }
+    batch.update({k: jnp.asarray(v)
+                  for k, v in modality_stub(cfg, B, rs).items()})
+    return batch
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_reduced_forward_shapes_finite(arch):
+    cfg = get_config(arch).reduced()
+    rs = np.random.RandomState(0)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg, rs)
+    extra = {k: batch[k] for k in ("audio", "vision") if k in batch}
+    logits, aux = forward(cfg, params, batch["tokens"], extra or None)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_reduced_train_step(arch):
+    cfg = get_config(arch).reduced()
+    if cfg.is_moe:  # avoid drop-nondeterminism in the loss assertion
+        cfg = dataclasses.replace(cfg, moe_capacity_factor=2.0)
+    rs = np.random.RandomState(1)
+    opt = adamw(1e-3)
+    params, opt_state = init_train_state(cfg, opt, jax.random.PRNGKey(1))
+    step = jax.jit(make_train_step(cfg, opt, remat="none"))
+    batch = _batch(cfg, rs)
+    p1, o1, m1 = step(params, opt_state, batch)
+    assert bool(jnp.isfinite(m1["loss"]))
+    assert float(m1["grad_norm"]) > 0
+    # params actually changed
+    delta = jax.tree.reduce(
+        lambda a, b: a + b,
+        jax.tree.map(lambda a, b: float(jnp.sum(jnp.abs(a - b))), params, p1))
+    assert delta > 0
+    # a second step on the same batch reduces loss (sanity of gradient)
+    p2, o2, m2 = step(p1, o1, batch)
+    assert float(m2["loss"]) < float(m1["loss"]) + 0.1
+
+
+@pytest.mark.parametrize("arch", ["recurrentgemma-2b", "xlstm-350m",
+                                  "phi3-medium-14b"])
+def test_remat_matches_no_remat(arch):
+    cfg = get_config(arch).reduced()
+    rs = np.random.RandomState(2)
+    params = init_params(cfg, jax.random.PRNGKey(2))
+    batch = _batch(cfg, rs)
+    from repro.train.steps import lm_loss
+    l0, _ = lm_loss(cfg, params, batch, remat="none")
+    l1, _ = lm_loss(cfg, params, batch, remat="block")
+    assert abs(float(l0) - float(l1)) < 1e-4
+
+
+@pytest.mark.parametrize("arch", ["phi3-medium-14b", "recurrentgemma-2b",
+                                  "whisper-small", "grok-1-314b"])
+def test_unroll_matches_scan(arch):
+    cfg = get_config(arch).reduced()
+    rs = np.random.RandomState(3)
+    params = init_params(cfg, jax.random.PRNGKey(3))
+    batch = _batch(cfg, rs)
+    extra = {k: batch[k] for k in ("audio", "vision") if k in batch}
+    l_scan, _ = forward(cfg, params, batch["tokens"], extra or None,
+                        unroll=False)
+    l_unroll, _ = forward(cfg, params, batch["tokens"], extra or None,
+                          unroll=True)
+    np.testing.assert_allclose(np.asarray(l_scan), np.asarray(l_unroll),
+                               atol=2e-5, rtol=2e-5)

@@ -1,0 +1,78 @@
+"""Config registry + parameter-count sanity vs published sizes."""
+import pytest
+
+from repro.configs import ALL_ARCHS, SHAPES, get_config, list_archs
+from repro.configs.base import supports_shape
+
+EXPECTED_PARAMS_B = {
+    "kimi-k2-1t-a32b": (950, 1150),
+    "whisper-small": (0.2, 0.4),
+    "nemotron-4-340b": (320, 360),
+    "llama-3.2-vision-90b": (80, 95),
+    "qwen1.5-32b": (30, 40),
+    "recurrentgemma-2b": (2.0, 4.0),
+    "minitron-4b": (3.5, 5.0),
+    "grok-1-314b": (290, 330),
+    "xlstm-350m": (0.2, 0.5),
+    "phi3-medium-14b": (13, 16),
+}
+
+
+def test_all_archs_registered():
+    assert set(ALL_ARCHS) <= set(list_archs())
+    assert len(ALL_ARCHS) == 10
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_param_counts_in_published_band(arch):
+    cfg = get_config(arch)
+    lo, hi = EXPECTED_PARAMS_B[arch]
+    count_b = cfg.param_count() / 1e9
+    assert lo <= count_b <= hi, f"{arch}: {count_b:.2f}B not in [{lo},{hi}]"
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_moe_active_less_than_total(arch):
+    cfg = get_config(arch)
+    if cfg.is_moe:
+        assert cfg.active_param_count() < cfg.param_count()
+    else:
+        assert cfg.active_param_count() == cfg.param_count()
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_reduced_constraints(arch):
+    r = get_config(arch).reduced()
+    assert r.d_model <= 512
+    assert r.num_layers <= 3
+    assert r.num_experts <= 4
+    assert r.vocab_size <= 1024
+    assert r.num_heads % r.num_kv_heads == 0
+    # reduced keeps every distinct block type of the family
+    assert set(r.block_pattern) == set(get_config(arch).block_pattern) \
+        or len(set(get_config(arch).block_pattern)) > 2
+
+
+def test_shapes_table():
+    assert SHAPES["train_4k"].seq_len == 4096
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].seq_len == 32768
+    assert SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524288
+    assert SHAPES["long_500k"].global_batch == 1
+
+
+def test_long_500k_support_policy():
+    runs, skips = [], []
+    for a in ALL_ARCHS:
+        ok, why = supports_shape(get_config(a), SHAPES["long_500k"])
+        (runs if ok else skips).append(a)
+    assert "recurrentgemma-2b" in runs and "xlstm-350m" in runs
+    # dense archs run via sliding-window serving variant
+    for dense in ("nemotron-4-340b", "qwen1.5-32b", "minitron-4b",
+                  "phi3-medium-14b"):
+        assert dense in runs
+    for full_attn in ("kimi-k2-1t-a32b", "grok-1-314b", "whisper-small",
+                      "llama-3.2-vision-90b"):
+        assert full_attn in skips

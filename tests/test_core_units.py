@@ -1,0 +1,179 @@
+"""Unit + property tests for the WPFed core primitives."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import distill, neighbor, ranking, verify
+from repro.core.chain import fnv1a_commit
+
+
+# ---------------------------------------------------------------------------
+# ranking (Eq. 7)
+# ---------------------------------------------------------------------------
+def test_make_ranking_orders_by_loss():
+    ids = jnp.array([5, 2, 9, 1], jnp.int32)
+    losses = jnp.array([0.9, 0.1, 0.5, 0.3])
+    r = ranking.make_ranking(ids, losses)
+    assert list(np.asarray(r)) == [2, 1, 9, 5]
+
+
+def test_make_ranking_invalid_sink_to_minus_one():
+    ids = jnp.array([5, 2, 9, 1], jnp.int32)
+    losses = jnp.array([0.9, 0.1, 0.5, 0.3])
+    mask = jnp.array([True, False, True, True])
+    r = ranking.make_ranking(ids, losses, mask)
+    assert list(np.asarray(r)) == [1, 9, 5, -1]
+
+
+def test_ranking_scores_eq7():
+    # 3 reporters, 4 clients; K=1
+    rankings = jnp.array([[1, 2], [1, 3], [2, 1]], jnp.int32)
+    s = ranking.ranking_scores(rankings, 4, top_k=1)
+    # client 1 appears in 3 rankings, top-1 in two -> 2/3
+    assert abs(float(s[1]) - 2 / 3) < 1e-6
+    # client 2 appears twice, top-1 once -> 1/2
+    assert abs(float(s[2]) - 0.5) < 1e-6
+    # client 0 never ranked -> 0
+    assert float(s[0]) == 0.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 1000))
+def test_ranking_scores_bounded(seed):
+    key = jax.random.PRNGKey(seed)
+    m, n, c = 8, 4, 8
+    rankings = jax.random.randint(key, (m, n), -1, c).astype(jnp.int32)
+    s = ranking.ranking_scores(rankings, c, top_k=2)
+    assert bool(jnp.all(s >= 0)) and bool(jnp.all(s <= 1))
+
+
+def test_ranking_scores_excludes_bad_reporters():
+    rankings = jnp.array([[1], [1], [1]], jnp.int32)
+    s_all = ranking.ranking_scores(rankings, 3, top_k=1)
+    s_some = ranking.ranking_scores(rankings, 3, top_k=1,
+                                    reporter_mask=jnp.array([True, False,
+                                                             False]))
+    assert float(s_all[1]) == 1.0 and float(s_some[1]) == 1.0
+    # with zero honest reporters the score collapses to 0 (no evidence)
+    s_none = ranking.ranking_scores(rankings, 3, top_k=1,
+                                    reporter_mask=jnp.zeros(3, bool))
+    assert float(s_none[1]) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# neighbor selection (Eq. 8)
+# ---------------------------------------------------------------------------
+def test_selection_weight_formula():
+    scores = jnp.array([0.5, 1.0, 0.25])
+    d = jnp.array([[0.0, 0.2, 0.8],
+                   [0.2, 0.0, 0.5],
+                   [0.8, 0.5, 0.0]], jnp.float32)
+    w = neighbor.selection_weights(scores, d, gamma=2.0)
+    assert np.isclose(float(w[0, 1]), 1.0 * np.exp(-0.4))
+    assert np.isclose(float(w[0, 2]), 0.25 * np.exp(-1.6))
+    assert not np.isfinite(float(w[0, 0]))            # self excluded
+
+
+def test_selection_ablation_switches():
+    scores = jnp.array([0.1, 0.9, 0.5])
+    d = jnp.ones((3, 3)) * 0.3
+    w_rank_only = neighbor.selection_weights(scores, d, 1.0, use_lsh=False)
+    assert np.isclose(float(w_rank_only[0, 1]), 0.9)
+    w_lsh_only = neighbor.selection_weights(scores, d, 1.0, use_rank=False)
+    assert np.isclose(float(w_lsh_only[0, 1]), np.exp(-0.3))
+    w_rand = neighbor.selection_weights(scores, d, 1.0, use_lsh=False,
+                                        use_rank=False,
+                                        rng=jax.random.PRNGKey(0))
+    assert bool(jnp.all(jnp.isfinite(w_rand[~np.eye(3, dtype=bool)])))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 999), st.integers(2, 10))
+def test_select_neighbors_topn_no_self(seed, m):
+    key = jax.random.PRNGKey(seed)
+    w = jax.random.uniform(key, (m, m))
+    w = jnp.where(jnp.eye(m, dtype=bool), -jnp.inf, w)
+    ids, mask = neighbor.select_neighbors(w, 3)
+    for i in range(m):
+        sel = np.asarray(ids[i])[np.asarray(mask[i])]
+        assert i not in sel
+        assert len(set(sel.tolist())) == len(sel)
+
+
+# ---------------------------------------------------------------------------
+# verification (§3.5, §3.6)
+# ---------------------------------------------------------------------------
+def _skewed(own, strength):
+    """Boost class 0 by `strength` — changes the softmax (a constant
+    shift would not)."""
+    return own.at[:, 0].add(strength)
+
+
+def test_lsh_verification_keeps_upper_half():
+    own = jnp.tile(jnp.array([[1.0, 0.5, -0.5]]), (4, 1))
+    near = jnp.stack([_skewed(own, 0.01), _skewed(own, 0.05),
+                      _skewed(own, 5.0), _skewed(own, 9.0)])
+    mask = jnp.ones((4,), bool)
+    keep = verify.lsh_verification_mask(own, near, mask)
+    assert list(np.asarray(keep)) == [True, True, False, False]
+
+
+def test_lsh_verification_respects_selection_mask():
+    own = jnp.tile(jnp.array([[1.0, 0.5, -0.5]]), (4, 1))
+    near = jnp.stack([_skewed(own, 9.0), _skewed(own, 0.01),
+                      _skewed(own, 0.02), _skewed(own, 0.03)])
+    mask = jnp.array([True, True, False, False])
+    keep = verify.lsh_verification_mask(own, near, mask)
+    # only 2 valid -> keep 1 (upper half): the more-similar valid one (#1)
+    assert list(np.asarray(keep)) == [False, True, False, False]
+
+
+def test_kl_divergence_properties():
+    a = jnp.array([[2.0, 0.0, -1.0]])
+    assert float(verify.kl_divergence(a, a)) < 1e-9
+    b = jnp.array([[0.0, 2.0, -1.0]])
+    assert float(verify.kl_divergence(a, b)) > 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 500))
+def test_fnv_commitment_binds(seed):
+    key = jax.random.PRNGKey(seed)
+    r = jax.random.randint(key, (5, 4), -1, 10).astype(jnp.int32)
+    c = fnv1a_commit(r)
+    assert bool(jnp.all(fnv1a_commit(r) == c))
+    r2 = r.at[2, 1].add(1)
+    assert not bool(jnp.all(fnv1a_commit(r2) == c))
+
+
+# ---------------------------------------------------------------------------
+# distillation (Eq. 2-4)
+# ---------------------------------------------------------------------------
+def test_aggregate_neighbor_outputs():
+    nl = jnp.stack([jnp.ones((3, 2)), 3 * jnp.ones((3, 2)),
+                    100 * jnp.ones((3, 2))])
+    agg, has = distill.aggregate_neighbor_outputs(
+        nl, jnp.array([True, True, False]))
+    assert bool(has)
+    assert np.allclose(np.asarray(agg), 2.0)
+    agg0, has0 = distill.aggregate_neighbor_outputs(
+        nl, jnp.zeros((3,), bool))
+    assert not bool(has0)
+    assert np.allclose(np.asarray(agg0), 0.0)
+
+
+def test_combined_loss_alpha_extremes(tiny_fed):
+    apply_fn = tiny_fed["apply_fn"]
+    init_fn = tiny_fed["init_fn"]
+    data = tiny_fed["data"]
+    p = init_fn(jax.random.PRNGKey(0))
+    batch = {"x": data["x_train"][0][:8], "y": data["y_train"][0][:8]}
+    tgt = jnp.zeros((data["x_ref"].shape[1], 3))
+    l1, (ll, lr) = distill.combined_loss(apply_fn, p, batch,
+                                         data["x_ref"][0], tgt, True, 1.0)
+    assert np.isclose(float(l1), float(ll))
+    l0, (ll0, lr0) = distill.combined_loss(apply_fn, p, batch,
+                                           data["x_ref"][0], tgt, True, 0.0)
+    assert np.isclose(float(l0), float(lr0))

@@ -1,0 +1,80 @@
+"""Serving invariant: sequential decode == full forward; prefill -> decode
+handoff is exact. Run for every architecture family."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ALL_ARCHS, get_config
+from repro.models import decode_step, forward, init_cache, init_params, prefill
+
+S = 10
+TOL = 2e-4
+
+
+def _setup(arch, key):
+    cfg = get_config(arch).reduced()
+    if cfg.is_moe:
+        cfg = dataclasses.replace(cfg, moe_capacity_factor=100.0)
+    params = init_params(cfg, key)
+    tokens = jax.random.randint(key, (2, S), 0, cfg.vocab_size)
+    extra = None
+    if cfg.is_encdec:
+        extra = {"audio": jax.random.normal(
+            key, (2, cfg.encoder_seq_len, cfg.d_model)) * 0.1}
+    if cfg.vision_tokens:
+        extra = {"vision": jax.random.normal(
+            key, (2, cfg.vision_tokens, cfg.vision_dim)) * 0.1}
+    return cfg, params, tokens, extra
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_decode_matches_forward(arch):
+    key = jax.random.PRNGKey(0)
+    cfg, params, tokens, extra = _setup(arch, key)
+    full, _ = forward(cfg, params, tokens, extra)
+    cache = init_cache(cfg, params, 2, S, extra=extra)
+    for pos in range(S):
+        lg, cache = decode_step(cfg, params, cache, tokens[:, pos],
+                                jnp.int32(pos))
+        err = float(jnp.max(jnp.abs(lg - full[:, pos])))
+        assert err < TOL, f"{arch} pos {pos}: {err}"
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_prefill_handoff(arch):
+    key = jax.random.PRNGKey(1)
+    cfg, params, tokens, extra = _setup(arch, key)
+    full, _ = forward(cfg, params, tokens, extra)
+    lgp, cache = prefill(cfg, params, tokens[:, :S - 1], extra, cache_len=S)
+    assert float(jnp.max(jnp.abs(lgp - full[:, S - 2]))) < TOL
+    lg, _ = decode_step(cfg, params, cache, tokens[:, S - 1],
+                        jnp.int32(S - 1))
+    assert float(jnp.max(jnp.abs(lg - full[:, S - 1]))) < TOL
+
+
+@pytest.mark.parametrize("arch", ["phi3-medium-14b", "nemotron-4-340b"])
+def test_sliding_window_serving_variant(arch):
+    """window_override decode must agree with the window-masked forward."""
+    key = jax.random.PRNGKey(2)
+    cfg, params, tokens, extra = _setup(arch, key)
+    win = 4
+    full, _ = forward(cfg, params, tokens, extra, window_override=win)
+    cache = init_cache(cfg, params, 2, S, extra=extra, window_override=win)
+    for pos in range(S):
+        lg, cache = decode_step(cfg, params, cache, tokens[:, pos],
+                                jnp.int32(pos), window_override=win)
+        err = float(jnp.max(jnp.abs(lg - full[:, pos])))
+        assert err < TOL, f"{arch} win pos {pos}: {err}"
+
+
+def test_window_ring_buffer_bounded():
+    """Ring cache never grows beyond the window size."""
+    cfg = get_config("phi3-medium-14b").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(3))
+    win = 4
+    cache = init_cache(cfg, params, 2, 64, window_override=win)
+    kv = jax.tree.leaves(cache["layers"])[0]
+    assert kv.shape[2] == win  # (reps, B, win, kv, dh)

@@ -1,0 +1,129 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.hamming import hamming_all_pairs
+from repro.kernels.lsh_projection import CHUNK, lsh_project_sums
+
+
+@pytest.mark.parametrize("nchunks", [1, 2, 5])
+@pytest.mark.parametrize("bits", [128, 256, 512])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_lsh_kernel_matches_oracle(nchunks, bits, dtype):
+    x = (jax.random.normal(jax.random.PRNGKey(nchunks), (CHUNK * nchunks,))
+         .astype(dtype).astype(jnp.float32))
+    k = lsh_project_sums(x, 42, bits=bits, interpret=True)
+    r = ref.lsh_project_sums_ref(x, 42, bits=bits)
+    scale = 1 + float(jnp.max(jnp.abs(r)))
+    assert float(jnp.max(jnp.abs(k - r))) < 1e-3 * scale
+
+
+@pytest.mark.parametrize("m,n", [(32, 128), (64, 256), (128, 128)])
+@pytest.mark.parametrize("words", [128, 256])
+def test_hamming_kernel_matches_oracle(m, n, words):
+    key = jax.random.PRNGKey(m * n)
+    bits_a = jax.random.bernoulli(key, 0.5, (m, words * 32))
+    bits_b = jax.random.bernoulli(jax.random.fold_in(key, 1), 0.5,
+                                  (n, words * 32))
+    a = ops.pack_bits(jnp.where(bits_a, 1.0, -1.0))
+    b = ops.pack_bits(jnp.where(bits_b, 1.0, -1.0))
+    k = hamming_all_pairs(a, b, interpret=True)
+    r = ref.hamming_all_pairs_ref(a, b)
+    assert bool(jnp.all(k == r))
+
+
+def test_hamming_matrix_padding_path():
+    """hamming_matrix pads M and word axes; results must match oracle."""
+    key = jax.random.PRNGKey(7)
+    bits = jax.random.bernoulli(key, 0.5, (10, 256))     # M=10, W=8
+    codes = ops.pack_bits(jnp.where(bits, 1.0, -1.0))
+    d_kernel = ops.hamming_matrix(codes, use_kernel=True)
+    d_ref = ops.hamming_matrix(codes, use_kernel=False)
+    assert bool(jnp.all(d_kernel == d_ref))
+    assert bool(jnp.all(jnp.diag(d_kernel) == 0))
+    assert bool(jnp.all(d_kernel == d_kernel.T))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 8))
+def test_pack_unpack_roundtrip(seed, words):
+    bits = words * 32
+    s = jax.random.normal(jax.random.PRNGKey(seed), (3, bits))
+    packed = ops.pack_bits(s)
+    assert packed.dtype == jnp.uint32 and packed.shape == (3, words)
+    unpacked = ops.unpack_bits(packed, bits)
+    assert bool(jnp.all(unpacked == (s > 0)))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000), st.floats(0.001, 0.2))
+def test_lsh_locality_property(seed, noise):
+    """Hamming(code(p), code(p + small noise)) < Hamming(code(p), code(q))
+    for independent q — the property WPFed's similarity relies on."""
+    key = jax.random.PRNGKey(seed)
+    p = jax.random.normal(key, (CHUNK,))
+    p_near = p + noise * jax.random.normal(jax.random.fold_in(key, 1),
+                                           (CHUNK,))
+    q = jax.random.normal(jax.random.fold_in(key, 2), (CHUNK,))
+    codes = jnp.stack([
+        ops.pack_bits(ref.lsh_project_sums_ref(v, 9, bits=256))
+        for v in (p, p_near, q)])
+    d = ops.hamming_matrix(codes, use_kernel=False)
+    assert int(d[0, 1]) < int(d[0, 2])
+
+
+def test_flatten_params_padding():
+    tree = {"a": jnp.ones((100,)), "b": jnp.ones((3, 7))}
+    flat = ops.flatten_params(tree)
+    assert flat.shape[0] % CHUNK == 0
+    assert float(jnp.sum(flat)) == 121.0
+
+
+# ---------------------------------------------------------------------------
+# flash attention kernel
+# ---------------------------------------------------------------------------
+from repro.kernels.flash_attention import flash_attention
+
+
+@pytest.mark.parametrize("n,sq,sk,dh", [(2, 256, 256, 128), (1, 512, 512, 64),
+                                        (2, 256, 512, 128)])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_oracle(n, sq, sk, dh, causal, dtype):
+    if causal and sq != sk:
+        pytest.skip("causal requires square")
+    key = jax.random.PRNGKey(n * sq + dh)
+    q = jax.random.normal(key, (n, sq, dh)).astype(dtype)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (n, sk, dh)).astype(dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (n, sk, dh)).astype(dtype)
+    o_k = flash_attention(q, k, v, causal=causal, interpret=True)
+    o_r = ref.flash_attention_ref(q, k, v, causal=causal)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    assert float(jnp.max(jnp.abs(o_k.astype(jnp.float32)
+                                 - o_r.astype(jnp.float32)))) < tol
+
+
+def test_gqa_flash_wrapper_matches_model_attention():
+    """The GQA wrapper must agree with the model's own attention path."""
+    from repro.configs import get_config
+    from repro.models import attention as attn_mod
+    from repro.models.attention import _naive_attn
+    cfg = get_config("phi3-medium-14b").reduced()
+    key = jax.random.PRNGKey(3)
+    b, s, h, kv, dh = 2, 256, cfg.num_heads, cfg.num_kv_heads, 64
+    q = jax.random.normal(key, (b, s, h, dh))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, kv, dh))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, kv, dh))
+    o_flash = ops.gqa_flash_attention(q, k, v, causal=True)
+    # model path (scores einsum) on the same tensors
+    scores = attn_mod._gqa_scores(cfg, q, k)
+    mask = jnp.arange(s)[:, None] >= jnp.arange(s)[None, :]
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bkgqs,bskd->bqkgd", probs, v.astype(jnp.float32))
+    o_model = ctx.reshape(b, s, h, dh)
+    assert float(jnp.max(jnp.abs(o_flash - o_model))) < 2e-5

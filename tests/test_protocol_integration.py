@@ -1,0 +1,158 @@
+"""Integration tests: full WPFed rounds, attacks, baselines, chain."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import attacks, evaluate, init_state, make_wpfed_round
+from repro.core.baselines import (make_fedmd_round, make_kdpdfl_round,
+                                  make_proxyfl_round, make_silo_round)
+from repro.core.chain import (Blockchain, lsh_code_hex, sha256_commit,
+                              verify_reveal)
+from repro.core.verify import verify_rankings_fnv
+
+
+@pytest.fixture(scope="module")
+def fed_run(tiny_fed):
+    """Run 3 WPFed rounds once; several tests inspect the results."""
+    f = tiny_fed
+    state0 = init_state(f["apply_fn"], f["init_fn"], f["opt"], f["fed"],
+                        jax.random.PRNGKey(0))
+    round_fn = jax.jit(make_wpfed_round(f["apply_fn"], f["opt"], f["fed"]))
+    acc0 = float(evaluate(f["apply_fn"], state0, f["data"])["mean_acc"])
+    state, metrics = state0, None
+    for _ in range(5):
+        state, metrics = round_fn(state, f["data"])
+    acc1 = float(evaluate(f["apply_fn"], state, f["data"])["mean_acc"])
+    return {"state0": state0, "state": state, "metrics": metrics,
+            "acc0": acc0, "acc1": acc1}
+
+
+def test_wpfed_improves_accuracy(fed_run):
+    assert fed_run["acc1"] > fed_run["acc0"]
+
+
+def test_wpfed_reporters_all_honest(fed_run):
+    assert float(fed_run["metrics"]["honest_reporter_frac"]) == 1.0
+
+
+def test_wpfed_lsh_filter_keeps_upper_half(fed_run):
+    # N=3 selected -> ceil(3/2)=2 pass -> 2/3 valid fraction
+    assert abs(float(fed_run["metrics"]["valid_neighbor_frac"]) - 2 / 3) < 1e-6
+
+
+def test_wpfed_neighbors_exclude_self(fed_run):
+    ids = np.asarray(fed_run["metrics"]["neighbor_ids"])
+    for i in range(ids.shape[0]):
+        assert i not in ids[i]
+
+
+def test_wpfed_announcements_change(fed_run):
+    assert not bool(jnp.all(fed_run["state"].codes
+                            == fed_run["state0"].codes))
+    assert not bool(jnp.all(fed_run["state"].commitments
+                            == fed_run["state0"].commitments))
+
+
+def test_commit_reveal_catches_liar(tiny_fed, fed_run):
+    state = fed_run["state"]
+    liar = jnp.array([True, False, False, False, False, False])
+    lied = attacks.lie_in_reveal(state, liar, jax.random.PRNGKey(5))
+    det = verify_rankings_fnv(lied.rankings, lied.commitments)
+    assert not bool(det[0])
+    assert bool(jnp.all(det[1:]))
+
+
+def test_lsh_cheat_filtered_by_verification(tiny_fed):
+    """Forged codes raise selection likelihood, but §3.5 output-KL
+    verification must exclude the attackers from distillation."""
+    f = tiny_fed
+    state = init_state(f["apply_fn"], f["init_fn"], f["opt"], f["fed"],
+                       jax.random.PRNGKey(1))
+    round_fn = jax.jit(make_wpfed_round(f["apply_fn"], f["opt"], f["fed"]))
+    for _ in range(2):                      # let models differentiate
+        state, _ = round_fn(state, f["data"])
+    attacker = jnp.array([False, False, False, True, True, True])
+    state = attacks.corrupt_params(state, attacker, f["init_fn"],
+                                   jax.random.PRNGKey(2))
+    state = attacks.forge_lsh_codes(state, attacker, target_id=0)
+    state, m = round_fn(state, f["data"])
+    ids = np.asarray(m["neighbor_ids"])
+    # verification validity among client 0's selected neighbors:
+    # attackers (corrupt params -> dissimilar outputs) should mostly fail
+    valid_frac = float(m["valid_neighbor_frac"])
+    assert valid_frac <= 2 / 3 + 1e-6
+
+
+def test_silo_baseline_never_mixes(tiny_fed):
+    f = tiny_fed
+    state = init_state(f["apply_fn"], f["init_fn"], f["opt"], f["fed"],
+                       jax.random.PRNGKey(3))
+    silo = jax.jit(make_silo_round(f["apply_fn"], f["opt"], f["fed"]))
+    s1, m = silo(state, f["data"])
+    assert np.isfinite(float(m["mean_loss"]))
+    # codes/rankings untouched by silo (no announcements)
+    assert bool(jnp.all(s1.codes == state.codes))
+
+
+@pytest.mark.parametrize("maker", [make_proxyfl_round, make_kdpdfl_round])
+def test_gossip_baselines_run(tiny_fed, maker):
+    f = tiny_fed
+    state = init_state(f["apply_fn"], f["init_fn"], f["opt"], f["fed"],
+                       jax.random.PRNGKey(4))
+    fn = jax.jit(maker(f["apply_fn"], f["opt"], f["fed"]))
+    s1, m = fn(state, f["data"])
+    assert np.isfinite(float(m["mean_loss"]))
+
+
+def test_fedmd_baseline_runs(tiny_fed):
+    f = tiny_fed
+    state = init_state(f["apply_fn"], f["init_fn"], f["opt"], f["fed"],
+                       jax.random.PRNGKey(5))
+    shared = f["data"]["x_ref"][0]
+    fn = jax.jit(make_fedmd_round(f["apply_fn"], f["opt"], f["fed"], shared))
+    s1, m = fn(state, f["data"])
+    assert np.isfinite(float(m["mean_loss"]))
+
+
+def test_blockchain_round_trip(fed_run):
+    """Host-ledger integration: publish announcements from a real round,
+    verify chain + commit-reveal."""
+    state = fed_run["state"]
+    bc = Blockchain()
+    ann = {i: {"lsh": lsh_code_hex(state.codes[i]),
+               "commit": sha256_commit(np.asarray(state.rankings[i]))}
+           for i in range(state.codes.shape[0])}
+    bc.publish_round(1, ann)
+    reveals = {i: [int(x) for x in np.asarray(state.rankings[i])]
+               for i in range(state.codes.shape[0])}
+    bc.publish_round(2, {}, reveals=reveals)
+    assert bc.verify_chain()
+    blk = bc.round_block(1)
+    for i, r in reveals.items():
+        assert verify_reveal(blk.payload["announcements"][str(i)]["commit"],
+                             np.asarray(r))
+    # tamper -> detected
+    blk.payload["announcements"]["0"]["commit"] = "00" * 32
+    assert not bc.verify_chain()
+
+
+def test_ablation_switches_alter_selection(tiny_fed):
+    import dataclasses
+    f = tiny_fed
+    state = init_state(f["apply_fn"], f["init_fn"], f["opt"], f["fed"],
+                       jax.random.PRNGKey(6))
+    variants = {}
+    for name, kw in {
+        "full": {},
+        "no_lsh": {"use_lsh": False},
+        "no_rank": {"use_rank": False},
+        "random": {"use_lsh": False, "use_rank": False},
+    }.items():
+        fed_v = dataclasses.replace(f["fed"], **kw)
+        fn = jax.jit(make_wpfed_round(f["apply_fn"], f["opt"], fed_v))
+        _, m = fn(state, f["data"])
+        variants[name] = np.asarray(m["neighbor_ids"])
+    assert not np.array_equal(variants["full"], variants["random"])

@@ -1,0 +1,78 @@
+"""Sharding-rule consistency: spec trees must mirror param/cache trees,
+and specs must actually bind on a mesh (host 1x1 mesh keeps this on CPU)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ALL_ARCHS, get_config
+from repro.launch.mesh import make_host_mesh
+from repro.models import init_cache, init_params
+from repro.models.transformer import param_specs
+from repro.optim import adamw
+from repro.sharding import cache_specs, named, opt_state_specs
+
+
+def _treedefs_match(tree_a, tree_b):
+    ta = jax.tree.structure(tree_a)
+    tb = jax.tree.structure(
+        tree_b, is_leaf=lambda x: isinstance(x, P))
+    return ta == tb
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_param_specs_mirror_params(arch):
+    cfg = get_config(arch).reduced()
+    params = jax.eval_shape(functools.partial(init_params, cfg),
+                            jax.random.PRNGKey(0))
+    specs = param_specs(cfg)
+    assert _treedefs_match(params, specs), arch
+    # every spec has rank <= param rank
+    for leaf, spec in zip(
+            jax.tree.leaves(params),
+            jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))):
+        assert len(spec) <= len(leaf.shape), (arch, leaf.shape, spec)
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_opt_specs_mirror_state(arch):
+    cfg = get_config(arch).reduced()
+    params = jax.eval_shape(functools.partial(init_params, cfg),
+                            jax.random.PRNGKey(0))
+    opt = adamw(1e-3)
+    state = jax.eval_shape(opt.init, params)
+    specs = opt_state_specs(cfg)
+    assert _treedefs_match(state, specs), arch
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_cache_specs_mirror_cache(arch):
+    cfg = get_config(arch).reduced()
+    mesh = make_host_mesh()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    extra = None
+    if cfg.is_encdec:
+        extra = {"audio": jnp.zeros((2, cfg.encoder_seq_len, cfg.d_model))}
+    if cfg.vision_tokens:
+        extra = {"vision": jnp.zeros((2, cfg.vision_tokens, cfg.vision_dim))}
+    cache = jax.eval_shape(
+        functools.partial(init_cache, cfg, batch=2, cache_len=8),
+        params, extra=extra)
+    specs = cache_specs(cfg, mesh)
+    assert _treedefs_match(cache, specs), arch
+
+
+def test_specs_bind_on_mesh():
+    """NamedSharding construction + jit with in_shardings on a 1x1 mesh."""
+    cfg = get_config("phi3-medium-14b").reduced()
+    mesh = make_host_mesh()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    shardings = named(mesh, param_specs(cfg))
+    placed = jax.device_put(params, shardings)
+    from repro.models import forward
+    tokens = jnp.zeros((2, 8), jnp.int32)
+    with mesh:
+        logits, _ = jax.jit(lambda p, t: forward(cfg, p, t))(placed, tokens)
+    assert logits.shape == (2, 8, cfg.vocab_size)

@@ -1,0 +1,149 @@
+"""Substrate tests: optimizer, schedules, checkpointing, data pipeline."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import checkpoint as ckpt
+from repro.data import (TokenStream, make_aecg_federated,
+                        make_mnist_federated, make_seeg_federated)
+from repro.configs import get_config
+from repro.optim import (adam, adamw, apply_updates, clip_by_global_norm,
+                         cosine_decay, linear_warmup_cosine, sgd)
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("opt_fn", [lambda: sgd(0.1),
+                                    lambda: sgd(0.1, momentum=0.9),
+                                    lambda: adam(0.1),
+                                    lambda: adamw(0.1, weight_decay=0.01)])
+def test_optimizer_minimizes_quadratic(opt_fn):
+    opt = opt_fn()
+    params = {"w": jnp.array([3.0, -2.0]), "b": jnp.array([1.5])}
+    state = opt.init(params)
+    loss = lambda p: jnp.sum(p["w"] ** 2) + jnp.sum(p["b"] ** 2)
+    l0 = float(loss(params))
+    for _ in range(60):
+        g = jax.grad(loss)(params)
+        upd, state = opt.update(g, state, params)
+        params = apply_updates(params, upd)
+    assert float(loss(params)) < 0.05 * l0
+
+
+def test_adamw_decay_shrinks_weights():
+    opt = adamw(0.05, weight_decay=0.5)
+    params = {"w": jnp.ones((4,))}
+    state = opt.init(params)
+    zero_g = {"w": jnp.zeros((4,))}
+    for _ in range(10):
+        upd, state = opt.update(zero_g, state, params)
+        params = apply_updates(params, upd)
+    assert float(jnp.max(params["w"])) < 1.0
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((3,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    cn = float(jnp.sqrt(jnp.sum(clipped["a"] ** 2)))
+    assert abs(cn - 1.0) < 1e-5
+    assert float(norm) > 1.0
+    small = {"a": jnp.full((3,), 0.01)}
+    kept, _ = clip_by_global_norm(small, 1.0)
+    assert np.allclose(np.asarray(kept["a"]), 0.01)
+
+
+def test_schedules():
+    s = linear_warmup_cosine(1.0, 10, 100)
+    assert float(s(jnp.int32(0))) == 0.0
+    assert abs(float(s(jnp.int32(10))) - 1.0) < 0.02
+    assert float(s(jnp.int32(100))) < 0.2
+    c = cosine_decay(1.0, 100)
+    assert float(c(jnp.int32(0))) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"layers": ({"w": jnp.arange(6.0).reshape(2, 3)},
+                       {"w": jnp.ones((4,), jnp.bfloat16)}),
+            "step": jnp.int32(7)}
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 3, tree)
+    ckpt.save(d, 9, tree)
+    assert ckpt.latest_step(d) == 9
+    like = jax.tree.map(jnp.zeros_like, tree)
+    restored = ckpt.restore(d, 9, like)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        assert a.dtype == b.dtype
+        assert np.allclose(np.asarray(a, np.float64),
+                           np.asarray(b, np.float64))
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 1, {"w": jnp.ones((3,))})
+    with pytest.raises(ValueError):
+        ckpt.restore(d, 1, {"w": jnp.ones((4,))})
+
+
+# ---------------------------------------------------------------------------
+# federated data pipeline (paper §4.3 statistics)
+# ---------------------------------------------------------------------------
+def test_mnist_partition_statistics():
+    ds = make_mnist_federated(num_clients=10, per_client=100,
+                              ref_per_client=16)
+    assert ds.num_clients == 10
+    for c in ds.clients:
+        # 7:3 split
+        total = len(c.x_train) + len(c.x_test)
+        assert abs(len(c.x_train) / total - 0.7) < 0.05
+        assert c.x_ref.shape == (16, 28, 28, 1)
+    # non-IID label skew: per-client class distributions differ
+    props = np.stack([np.bincount(c.y_train, minlength=10)
+                      / len(c.y_train) for c in ds.clients])
+    assert float(props.std(axis=0).max()) > 0.01
+    # reference sets are disjoint across clients
+    refs = [c.x_ref.tobytes() for c in ds.clients]
+    assert len(set(refs)) == len(refs)
+
+
+@pytest.mark.parametrize("maker,n,classes", [(make_aecg_federated, 6, 2),
+                                             (make_seeg_federated, 6, 3)])
+def test_subject_datasets(maker, n, classes):
+    ds = maker(num_clients=n)
+    assert ds.num_clients == n
+    st = ds.stacked()
+    assert st["x_train"].shape[0] == n
+    for c in ds.clients:
+        assert set(np.unique(c.y_train)) <= set(range(classes))
+    assert ds.shared_ref_x is not None
+
+
+def test_token_stream_determinism_and_shapes():
+    cfg = get_config("phi3-medium-14b").reduced()
+    s1 = TokenStream(cfg, 4, 32, seed=1)
+    s2 = TokenStream(cfg, 4, 32, seed=1)
+    b1, b2 = s1.next_batch(), s2.next_batch()
+    assert np.array_equal(b1["tokens"], b2["tokens"])
+    assert b1["tokens"].shape == (4, 32)
+    assert b1["labels"].shape == (4, 32)
+    # labels are next-token shifted
+    assert np.array_equal(b1["tokens"][:, 1:], b1["labels"][:, :-1])
+    assert b1["tokens"].max() < cfg.vocab_size
+
+
+def test_modality_stubs():
+    from repro.data import modality_stub
+    whisper = get_config("whisper-small").reduced()
+    stub = modality_stub(whisper, 2)
+    assert stub["audio"].shape == (2, whisper.encoder_seq_len,
+                                   whisper.d_model)
+    vlm = get_config("llama-3.2-vision-90b").reduced()
+    stub = modality_stub(vlm, 2)
+    assert stub["vision"].shape == (2, vlm.vision_tokens, vlm.vision_dim)
