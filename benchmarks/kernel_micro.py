@@ -1,57 +1,173 @@
-"""Kernel micro-benchmarks: LSH projection + Hamming (interpret-mode
-wall time is NOT TPU time — the derived column is the analytic TPU-v5e
-estimate from FLOP/byte counts; see EXPERIMENTS.md)."""
+"""Kernel micro-benchmarks: LSH projection (single + batched), Hamming,
+and the fused selection path (interpret-mode wall time is NOT TPU time —
+the derived column is the analytic TPU-v5e estimate from FLOP/byte
+counts; see EXPERIMENTS.md).
+
+The selection rows time the two *jnp* implementations the round can
+actually run on CPU: the fused oracle (popcount + discrete-domain exp
+LUT -> top-N; the bit-exact CPU twin of the Pallas kernel's Gram-matmul
+form, DESIGN.md §4) against the unfused composition (hamming ->
+normalized_distance -> selection_weights -> top_k). The measured
+speedup is the fused path's win in the distance/weight stages (LUT
+gather instead of M^2 transcendentals, no (M, M) intermediate
+materializations); lax.top_k is a shared fixed cost. `python
+benchmarks/kernel_micro.py` writes the machine-readable baseline to
+benchmarks/BENCH_selection.json.
+"""
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import time
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import lsh, neighbor
 from repro.kernels import ops, ref
-from repro.kernels.lsh_projection import CHUNK
+from repro.kernels.lsh_projection import CHUNK, lsh_project_sums_batched
+from repro.kernels.selection import fused_select
 
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9
+BENCH_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          "BENCH_selection.json")
+
+
+def _time(fn, *args, iters=3):
+    """Best-of-iters wall time in us (min filters scheduler noise,
+    which at sub-ms scales otherwise dominates the comparison)."""
+    fn(*args)  # compile + warm
+    jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.time()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.time() - t0)
+    return best * 1e6
 
 
 def bench_lsh(n_params=1 << 20, bits=256, iters=3):
     x = jax.random.normal(jax.random.PRNGKey(0), (n_params,))
-    fn = jax.jit(lambda v: ref.lsh_project_sums_ref(v, 3, bits=bits))
-    fn(x).block_until_ready()
-    t0 = time.time()
-    for _ in range(iters):
-        fn(x).block_until_ready()
-    us = (time.time() - t0) / iters * 1e6
+    us = _time(jax.jit(lambda v: ref.lsh_project_sums_ref(v, 3, bits=bits)),
+               x, iters=iters)
     flops = 2.0 * n_params * bits
     tpu_est_us = max(flops / PEAK_FLOPS, n_params * 4 / HBM_BW) * 1e6
     return us, tpu_est_us
+
+
+def bench_batched_lsh(m=64, n_params=1 << 16, bits=256, iters=3,
+                      with_kernel=False):
+    """Batched (M, P) projection: per-client-oracle vmap (the old
+    stacked path) vs the batched kernel's analytic TPU estimate. The
+    interpret-mode kernel wall time is reported only when requested
+    (it measures the interpreter, not the kernel)."""
+    x = jax.random.normal(jax.random.PRNGKey(1), (m, n_params))
+    oracle_us = _time(
+        jax.jit(lambda v: ops.batched_lsh_codes(v, 3, bits=bits,
+                                                use_kernel=False)),
+        x, iters=iters)
+    kernel_us = None
+    if with_kernel:
+        kernel_us = _time(
+            jax.jit(lambda v: ops.batched_lsh_codes(v, 3, bits=bits,
+                                                    use_kernel=True)),
+            x, iters=iters)
+    flops = 2.0 * m * n_params * bits
+    tpu_est_us = max(flops / PEAK_FLOPS, m * n_params * 4 / HBM_BW) * 1e6
+    return oracle_us, kernel_us, tpu_est_us
 
 
 def bench_hamming(m=128, words=8, iters=3):
     bits = jax.random.bernoulli(jax.random.PRNGKey(1), 0.5, (m, words * 32))
     codes = ops.pack_bits(jnp.where(bits, 1.0, -1.0))
     fn = jax.jit(lambda c: ops.hamming_matrix(c, use_kernel=False))
-    fn(codes).block_until_ready()
-    t0 = time.time()
-    for _ in range(iters):
-        fn(codes).block_until_ready()
-    us = (time.time() - t0) / iters * 1e6
+    us = _time(fn, codes, iters=iters)
     tpu_est_us = max(m * m * words * 8 / (PEAK_FLOPS / 16),
                      m * words * 4 / HBM_BW) * 1e6
     return us, tpu_est_us
 
 
-def main(log=print):
+def _unfused_select(codes, scores, bits, gamma, n):
+    d = lsh.distance_matrix(codes, use_kernel=False)
+    d_norm = lsh.normalized_distance(d, bits)
+    w = neighbor.selection_weights(scores, d_norm, gamma)
+    return neighbor.select_neighbors(w, n)
+
+
+def bench_fused_selection(m=256, bits=256, n=16, gamma=1.0, iters=10):
+    """Fused oracle vs unfused composition at federation scale M."""
+    words = bits // 32
+    key = jax.random.PRNGKey(m)
+    raw = jax.random.bernoulli(key, 0.5, (m, bits))
+    codes = ops.pack_bits(jnp.where(raw, 1.0, -1.0))
+    scores = jax.random.uniform(jax.random.fold_in(key, 1), (m,))
+
+    unfused_us = _time(
+        jax.jit(lambda c, s: _unfused_select(c, s, bits, gamma, n)),
+        codes, scores, iters=iters)
+    fused_us = _time(
+        jax.jit(lambda c, s: ref.fused_select_ref(
+            c, s, bits=bits, gamma=gamma, num_neighbors=n)),
+        codes, scores, iters=iters)
+    # TPU estimate: Gram matmul dominates; code + score reads are tiny.
+    tpu_est_us = max(2.0 * m * m * bits / PEAK_FLOPS,
+                     2 * m * words * 4 / HBM_BW) * 1e6
+    return {"m": m, "bits": bits, "n": n,
+            "unfused_us": round(unfused_us, 1),
+            "fused_us": round(fused_us, 1),
+            "speedup": round(unfused_us / fused_us, 2),
+            "tpu_est_us": round(tpu_est_us, 3)}
+
+
+def main(argv=None, log=print):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes / single iteration (CI budget)")
+    ap.add_argument("--json-out", default=BENCH_JSON,
+                    help="selection-baseline path ('' disables)")
+    args = ap.parse_args(argv)
+    iters = 1 if args.smoke else 3
+
     rows = []
-    for n in (1 << 18, 1 << 20, 1 << 22):
-        us, est = bench_lsh(n)
-        rows.append(("lsh_project_" + str(n), us, est))
-    for m in (64, 256):
-        us, est = bench_hamming(m)
+    lsh_sizes = (1 << 16,) if args.smoke else (1 << 18, 1 << 20, 1 << 22)
+    for nparams in lsh_sizes:
+        us, est = bench_lsh(nparams, iters=iters)
+        rows.append((f"lsh_project_{nparams}", us, est))
+    bm, bp = (8, 1 << 13) if args.smoke else (64, 1 << 16)
+    o_us, _, est = bench_batched_lsh(bm, bp, iters=iters)
+    rows.append((f"lsh_batched_{bm}x{bp}", o_us, est))
+    for m in ((64,) if args.smoke else (64, 256)):
+        us, est = bench_hamming(m, iters=iters)
         rows.append((f"hamming_{m}x{m}", us, est))
+
+    sel_ms = (64,) if args.smoke else (256, 512, 1024)
+    sel_rows = [bench_fused_selection(m, iters=iters) for m in sel_ms]
+    for r in sel_rows:
+        rows.append((f"select_unfused_{r['m']}", r["unfused_us"],
+                     r["tpu_est_us"]))
+        rows.append((f"select_fused_{r['m']}", r["fused_us"],
+                     r["tpu_est_us"]))
+        log(f"# fused selection speedup @ M={r['m']}: {r['speedup']}x")
     for name, us, est in rows:
         log(f"{name},{us:.1f},{est:.3f}")
+
+    if args.json_out and not args.smoke:
+        best = max(sel_rows, key=lambda r: r["speedup"])
+        with open(args.json_out, "w") as f:
+            json.dump({"selection": sel_rows,
+                       "measured_speedup": best["speedup"],
+                       "at_m": best["m"],
+                       "note": "CPU jnp wall times (fused oracle vs "
+                               "unfused composition). lax.top_k is a "
+                               "shared fixed cost that compresses the "
+                               "end-to-end ratio at small M; the fused "
+                               "win is in the distance/weight stages. "
+                               "tpu_est_us is the analytic v5e bound "
+                               "for the fused kernel"},
+                      f, indent=1)
+        log(f"# wrote {args.json_out}")
     return rows
 
 

@@ -36,7 +36,13 @@ def main() -> None:
     if want("kernels"):
         print("# kernel micro-benchmarks (name,us_per_call,tpu_est_us)")
         from benchmarks import kernel_micro
-        outputs["kernels"] = kernel_micro.main()
+        # explicit argv: kernel_micro must not re-parse run.py's flags,
+        # and its selection baseline goes to RESULTS_DIR — only a direct
+        # kernel_micro invocation rewrites the committed baseline.
+        outputs["kernels"] = kernel_micro.main(
+            ["--smoke"] if args.fast else
+            ["--json-out", os.path.join(RESULTS_DIR,
+                                        "BENCH_selection.json")])
 
     if want("roofline"):
         print("\n# roofline (from dry-run sweeps)")

@@ -1,0 +1,14 @@
+#!/usr/bin/env bash
+# One-command verify recipe: tier-1 tests + kernel micro-benchmark
+# (smoke mode). Usage: scripts/ci.sh [extra pytest args]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1: pytest =="
+python -m pytest -x -q "$@"
+
+echo "== kernel micro-benchmark (smoke) =="
+python benchmarks/kernel_micro.py --smoke
+
+echo "CI OK"

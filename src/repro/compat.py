@@ -1,0 +1,19 @@
+"""jax version compatibility shims (no repro imports — safe to use
+from any module without creating cycles)."""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None):
+    """jax >= 0.5 exposes `jax.shard_map(..., check_vma=)`; older
+    releases only `jax.experimental.shard_map.shard_map(...,
+    check_rep=)` (same meaning, old name). All repo code routes through
+    this wrapper so both spellings work."""
+    if hasattr(jax, "shard_map"):
+        kw = {} if check_vma is None else {"check_vma": check_vma}
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _sm
+    kw = {} if check_vma is None else {"check_rep": check_vma}
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)

@@ -79,6 +79,11 @@ class FedConfig:
     lr: float = 1e-3
     ref_batch: int = 64            # reference-set size exchanged per round
     seed: int = 0
+    # peer-selection backend (DESIGN.md §4): "kernel" runs the batched
+    # LSH projection + fused selection Pallas kernels (interpret-mode
+    # off-TPU), "oracle" the bit-exact jnp twins, "auto" kernel on TPU /
+    # oracle elsewhere.
+    selection_backend: str = "auto"
     # verification toggles (ablations / attack studies)
     use_lsh: bool = True           # w/o LSH ablation
     use_rank: bool = True          # w/o Rank ablation

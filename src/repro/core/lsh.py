@@ -1,9 +1,10 @@
 """LSH similarity layer (WPFed §3.2, Eq. 5-6).
 
 Wraps the Pallas kernels (repro.kernels) with protocol-level APIs:
-per-client codes from parameter pytrees, the all-pairs distance matrix,
-and the normalized distance used inside the selection weight
-w_ij = s_j * exp(-gamma * d_ij).
+per-client and batched codes from parameter pytrees, plus the unfused
+all-pairs distance matrix / normalized distance kept as the semantic
+reference for the fused selection path (the round itself goes through
+core.neighbor.select_partners, which fuses Eq. 6-8 — DESIGN.md §4).
 
 Normalization note (DESIGN.md §1): the paper's optimal gamma = 1.0 over
 a search space {0.01..1000} implies d is O(1); raw Hamming distances are
@@ -18,7 +19,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops
-from repro.kernels.ref import lsh_project_sums_ref
 
 
 def client_lsh_code(params, seed: int, bits: int = 256,
@@ -27,14 +27,21 @@ def client_lsh_code(params, seed: int, bits: int = 256,
     return ops.lsh_code(params, seed, bits=bits, use_kernel=use_kernel)
 
 
-def stacked_lsh_codes(stacked_params, seed: int, bits: int = 256):
-    """Codes for vmap-stacked client params (M, ...). Uses the pure-jnp
-    oracle inside vmap (pallas_call has no batching rule in interpret
-    mode); semantics are kernel-identical (tested bit-exact)."""
-    def one(p):
-        flat = ops.flatten_params(p)
-        return ops.pack_bits(lsh_project_sums_ref(flat, seed, bits=bits))
-    return jax.vmap(one)(stacked_params)
+def stacked_lsh_codes(stacked_params, seed, bits: int = 256,
+                      backend: str = "auto"):
+    """Codes for vmap-stacked client params (M, ...) — the per-round
+    federation path. The client axis flows through the natively batched
+    projection kernel (2D grid over client-block x chunk; DESIGN.md §4)
+    rather than a vmap of the single-client kernel, which has no
+    batching rule and used to silently fall back to the per-client
+    oracle. `seed` is the shared per-round LSH seed (all clients must
+    hash with the same projection for distances to be comparable); it
+    may be a traced scalar. Oracle backend is bit-exact at the code
+    level (tested)."""
+    flat2d = ops.flatten_params_batched(stacked_params)
+    use_kernel = ops.resolve_backend(backend) == "kernel"
+    return ops.batched_lsh_codes(flat2d, seed, bits=bits,
+                                 use_kernel=use_kernel)
 
 
 def sharded_lsh_code(local_shard_flat, seed: int, bits: int, axis_name: str):

@@ -1,15 +1,30 @@
-"""Personalized neighbor selection (WPFed §3.4, Eq. 8).
+"""Personalized neighbor selection (WPFed §3.4, Eq. 6-8).
 
-w_ij = s_j * exp(-gamma * d_ij); each client takes the top-N weights
-(excluding itself). Ablation switches reproduce Table 3:
+`select_partners` is the single protocol entry point: published LSH
+codes + crowd-sourced ranking scores -> per-client top-N partner ids.
+It owns the backend switch (DESIGN.md §4):
+
+  "kernel" -> fused Pallas kernel (Hamming -> Eq. 8 weights -> top-N in
+              one pass; interpret-mode off-TPU),
+  "oracle" -> the bit-exact fused jnp twin (ref.fused_select_ref),
+  "auto"   -> kernel on TPU, oracle elsewhere.
+
+The unfused pieces (`selection_weights`, `select_neighbors`) remain the
+semantic reference — tests assert the fused paths match their
+composition bit-exactly. Ablation switches reproduce Table 3:
   use_lsh=False  -> w_ij = s_j            ("w/o LSH")
   use_rank=False -> w_ij = exp(-gamma d)  ("w/o Rank")
   both False     -> uniform random selection ("w/o LSH & Rank")
+The both-off random ablation draws from an rng and always runs the jnp
+path (no kernel involvement regardless of backend).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+from repro.kernels.selection import fused_select
 
 
 def selection_weights(scores, dist_norm, gamma: float, *,
@@ -35,3 +50,37 @@ def select_neighbors(weights, num_neighbors: int):
     top_w, top_i = jax.lax.top_k(weights, n)
     mask = jnp.isfinite(top_w)
     return top_i.astype(jnp.int32), mask
+
+
+def select_partners(codes, scores, fed, *, rng=None, backend=None):
+    """Eq. 6-8 + top-N in one call: the WPFed partner-selection step.
+
+    codes: (M, W) uint32 published LSH codes; scores: (M,) f32 ranking
+    scores (Eq. 7, reporter-filtered by the caller); fed: FedConfig
+    (consumes num_neighbors, gamma, lsh_bits, use_lsh, use_rank,
+    selection_backend). rng is required only for the random ablation
+    (use_lsh=False, use_rank=False). `backend` overrides
+    fed.selection_backend when given.
+
+    Returns (ids (M, N) int32, sel_mask (M, N) bool). With N <= M-1
+    every selected id is a real, non-self client and the mask is all
+    True; the mask exists for degenerate M <= 1 federations.
+    """
+    m = codes.shape[0]
+    n = min(fed.num_neighbors, m - 1)
+    if not fed.use_lsh and not fed.use_rank:
+        w = selection_weights(scores, jnp.zeros((m, m), jnp.float32),
+                              fed.gamma, use_lsh=False, use_rank=False,
+                              rng=rng)
+        return select_neighbors(w, n)
+    resolved = ops.resolve_backend(backend or fed.selection_backend)
+    if resolved == "kernel":
+        ids, top_w = fused_select(
+            codes, scores, bits=fed.lsh_bits, gamma=fed.gamma,
+            num_neighbors=n, use_lsh=fed.use_lsh, use_rank=fed.use_rank,
+            interpret=ops._interpret())
+    else:
+        ids, top_w = ref.fused_select_ref(
+            codes, scores, bits=fed.lsh_bits, gamma=fed.gamma,
+            num_neighbors=n, use_lsh=fed.use_lsh, use_rank=fed.use_rank)
+    return ids, jnp.isfinite(top_w)

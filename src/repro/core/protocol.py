@@ -44,7 +44,9 @@ def init_state(apply_fn, init_fn, optimizer: Optimizer, fed: FedConfig,
     keys = jnp.stack(list(jax.random.split(key, m)))
     params = jax.vmap(init_fn)(keys)
     opt_state = jax.vmap(optimizer.init)(params)
-    codes = lsh.stacked_lsh_codes(params, seed=0, bits=fed.lsh_bits)
+    # round-0 codes use the round-0 LSH seed (see round_fn step 7)
+    codes = lsh.stacked_lsh_codes(params, seed=0, bits=fed.lsh_bits,
+                                  backend=fed.selection_backend)
     n = min(fed.num_neighbors, m - 1)
     rankings = -jnp.ones((m, n), jnp.int32)
     commitments = fnv1a_commit(rankings, salt=0)
@@ -99,7 +101,6 @@ def make_wpfed_round(apply_fn: Callable, optimizer: Optimizer,
     """Returns round_fn(state, data) -> (state, metrics). `data` is the
     stacked federated dataset dict (see data.federated.stacked)."""
     m = fed.num_clients
-    n = min(fed.num_neighbors, m - 1)
 
     def round_fn(state: FedState, data: Dict[str, jnp.ndarray]
                  ) -> Tuple[FedState, Dict[str, jnp.ndarray]]:
@@ -112,17 +113,13 @@ def make_wpfed_round(apply_fn: Callable, optimizer: Optimizer,
         else:
             reporter_mask = jnp.ones((m,), bool)
 
-        # --- 2-3. neighbor selection (Eq. 6-8) ---------------------------
-        d = lsh.distance_matrix(state.codes, use_kernel=False)
-        d_norm = lsh.normalized_distance(d, fed.lsh_bits)
+        # --- 2-3. neighbor selection (Eq. 6-8, fused; DESIGN.md §4) ------
         scores = ranking.ranking_scores(
             jnp.where(reporter_mask[:, None], state.rankings, -1),
             m, fed.top_k)
-        w = neighbor.selection_weights(
-            scores, d_norm, fed.gamma, use_lsh=fed.use_lsh,
-            use_rank=fed.use_rank,
+        ids, sel_mask = neighbor.select_partners(
+            state.codes, scores, fed,
             rng=rng_sel if not (fed.use_lsh or fed.use_rank) else None)
-        ids, sel_mask = neighbor.select_neighbors(w, n)     # (M,N)
 
         # --- 4. P2P logit exchange on personal reference sets ------------
         nb_params = jax.tree.map(lambda p: p[ids], state.params)  # (M,N,...)
@@ -153,8 +150,14 @@ def make_wpfed_round(apply_fn: Callable, optimizer: Optimizer,
             data_per, target_ref, has_target, upd_keys)
 
         # --- 7. announcements for the next round --------------------------
-        seed = state.round + 1
-        codes = lsh.stacked_lsh_codes(params, seed=0, bits=fed.lsh_bits)
+        # Codes consumed in round r+1 hash with the shared per-round
+        # seed r+1: every client projects with the SAME Rademacher
+        # matrix (distances stay comparable) and the projection rotates
+        # each round, so a §3.4 attacker cannot precompute a code that
+        # stays close to a victim across rounds (regression-tested).
+        codes = lsh.stacked_lsh_codes(params, seed=state.round + 1,
+                                      bits=fed.lsh_bits,
+                                      backend=fed.selection_backend)
         new_rankings = jax.vmap(ranking.make_ranking)(ids, l_ij, sel_mask)
         commitments = fnv1a_commit(new_rankings, salt=0)
 

@@ -15,11 +15,24 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.hamming import BM, BN, hamming_all_pairs
-from repro.kernels.lsh_projection import CHUNK, lsh_project_sums
+from repro.kernels.lsh_projection import (BLOCK_M, CHUNK,
+                                          lsh_project_sums,
+                                          lsh_project_sums_batched)
 
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def resolve_backend(backend: str) -> str:
+    """"auto" -> compiled kernels on TPU, jnp oracles elsewhere (the
+    interpret-mode Pallas path is for correctness tests, not CPU speed).
+    "kernel"/"oracle" force the choice (kernel interprets off-TPU)."""
+    if backend == "auto":
+        return "kernel" if jax.default_backend() == "tpu" else "oracle"
+    if backend not in ("kernel", "oracle"):
+        raise ValueError(f"unknown selection backend: {backend!r}")
+    return backend
 
 
 def flatten_params(params) -> jnp.ndarray:
@@ -46,6 +59,33 @@ def unpack_bits(codes, bits: int) -> jnp.ndarray:
     shifts = jnp.arange(32, dtype=jnp.uint32)
     out = ((words >> shifts) & jnp.uint32(1)).astype(jnp.uint32)
     return out.reshape(*codes.shape[:-1], codes.shape[-1] * 32)[..., :bits]
+
+
+def flatten_params_batched(stacked_params) -> jnp.ndarray:
+    """Stacked (M, ...) pytree -> (M, P) f32 matrix, P padded to a CHUNK
+    multiple. Row i equals flatten_params of client i's subtree (same
+    leaf order, same ravel)."""
+    leaves = [x.reshape(x.shape[0], -1).astype(jnp.float32)
+              for x in jax.tree.leaves(stacked_params)]
+    flat = jnp.concatenate(leaves, axis=1)
+    pad = (-flat.shape[1]) % CHUNK
+    return jnp.pad(flat, ((0, 0), (0, pad)))
+
+
+def batched_lsh_codes(flat2d, seed, *, bits: int = 256,
+                      use_kernel: bool = True):
+    """WPFed Eq. (5) over the stacked client axis: (M, P) f32 (P a CHUNK
+    multiple) -> (M, W) packed uint32 codes. Kernel path pads M to the
+    BLOCK_M row grid; padded rows are discarded."""
+    m = flat2d.shape[0]
+    if use_kernel:
+        pm = (-m) % BLOCK_M
+        x = jnp.pad(flat2d, ((0, pm), (0, 0)))
+        sums = lsh_project_sums_batched(x, seed, bits=bits,
+                                        interpret=_interpret())[:m]
+    else:
+        sums = ref.lsh_project_sums_batched_ref(flat2d, seed, bits=bits)
+    return pack_bits(sums)
 
 
 def lsh_code(params, seed, *, bits: int = 256, use_kernel: bool = True):

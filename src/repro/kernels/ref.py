@@ -1,6 +1,7 @@
 """Pure-jnp oracles for the Pallas kernels (bit-exact references)."""
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.kernels.lsh_projection import CHUNK, rademacher_block
@@ -13,6 +14,51 @@ def lsh_project_sums_ref(x, seed, *, bits: int = 256):
     p = x.shape[0]
     r = rademacher_block(0, p, bits, seed)
     return jnp.dot(x.astype(jnp.float32), r)
+
+
+def lsh_project_sums_batched_ref(x2d, seed, *, bits: int = 256):
+    """Per-client oracle for the batched LSH kernel: vmap of the single
+    full-width matmul. x2d: (M, P) with P % CHUNK == 0 -> (M, bits).
+
+    Sums may differ from the chunk-accumulating kernel in the last f32
+    ulps (different reduction order); the packed sign-bit codes are
+    bit-exact (asserted in tests)."""
+    return jax.vmap(
+        lambda v: lsh_project_sums_ref(v, seed, bits=bits))(x2d)
+
+
+def fused_select_ref(codes, scores, *, bits: int, gamma: float,
+                     num_neighbors: int, use_lsh: bool = True,
+                     use_rank: bool = True):
+    """Oracle for the fused selection kernel: XOR+popcount distances
+    (CPU-fast; the kernel's +-1 Gram matmul produces the same exact
+    integers on the MXU), Eq. 8 weighting through a discrete-domain
+    exp LUT, self-mask, lax.top_k.
+
+    The LUT trick (DESIGN.md §4): d only takes integer values in
+    [0, W*32], so exp(-gamma * d / bits) is a gather into a
+    (W*32 + 1)-entry table whose entries are jnp.exp evaluated on
+    exactly the inputs the direct formula would see — bit-identical
+    weights at M^2 loads instead of M^2 transcendentals.
+
+    codes: (M, W) uint32, scores: (M,) f32 ->
+    (ids (M, N) int32, top_w (M, N) f32).
+    """
+    m = codes.shape[0]
+    nsel = min(num_neighbors, m - 1)
+    d = hamming_all_pairs_ref(codes, codes)            # exact int32
+    if use_rank:
+        w = jnp.broadcast_to(scores.astype(jnp.float32)[None, :], (m, m))
+    else:
+        w = jnp.ones((m, m), jnp.float32)
+    if use_lsh:
+        dmax = codes.shape[1] * 32
+        table = jnp.exp(-gamma * (
+            jnp.arange(dmax + 1, dtype=jnp.float32) / float(bits)))
+        w = w * table[d]
+    w = jnp.where(jnp.eye(m, dtype=bool), -jnp.inf, w)
+    top_w, top_i = jax.lax.top_k(w, nsel)
+    return top_i.astype(jnp.int32), top_w
 
 
 def hamming_all_pairs_ref(codes_a, codes_b):

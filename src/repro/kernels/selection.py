@@ -1,0 +1,135 @@
+"""Pallas TPU kernel: fused peer selection (WPFed Eq. 6-8 in one pass).
+
+The unfused round does hamming_matrix -> normalized_distance ->
+selection_weights -> top_k, materializing three (M, M) arrays in HBM
+plus a (M, M, W) XOR-broadcast intermediate. This kernel fuses the whole
+chain: each program owns a (BM, M) row block of the weight matrix and
+produces the per-row top-N ids/weights directly — nothing (M, M)-shaped
+ever leaves VMEM (DESIGN.md §4).
+
+Distance trick: instead of XOR + SWAR popcount (pure VPU integer work),
+codes are unpacked to +-1 floats and the Gram matrix goes through the
+MXU: dot(u_i, u_j) = agreements - disagreements = bits_tot - 2 * d_ij,
+so d_ij = (bits_tot - dot) / 2. Every intermediate is an integer with
+|value| <= bits_tot << 2^24, exact in f32 regardless of reduction
+order — the kernel is therefore bit-exact against the jnp oracle
+(ref.fused_select_ref, which computes the same integers via popcount +
+an exp lookup table, the CPU-fast form) AND against the unfused
+popcount composition. Caveat: the distances are exact everywhere, but
+exp is not — in interpret mode kernel and oracle share XLA's exp
+(bit-exact, tested); on compiled TPU, Mosaic's exp lowering could
+differ from XLA's in the last ulp, which would flip selection order
+only for weights within 1 ulp of each other. If TPU hardware ever
+shows such divergence, pass the oracle's (bits+1)-entry LUT into the
+kernel and gather instead of calling exp (DESIGN.md §4).
+
+Weighting (Eq. 8): w_ij = s_j * exp(-gamma * d_ij / bits), with the
+Table-3 ablation switches compiled in (use_lsh / use_rank static flags;
+the both-off random ablation needs an rng and stays outside the kernel —
+see core.neighbor.select_partners). Self-weights and padded columns are
+masked to -inf before selection.
+
+Top-N: N iterations of (max, argmax, knock out) over the row block.
+argmax takes the first maximum, which reproduces jax.lax.top_k's
+tie-breaking (ascending index among equal values), so selected ids
+match the unfused path exactly as long as N <= M-1 (always true: the
+protocol clamps N to M-1, and every non-self weight is finite).
+
+The packed word axis is NOT padded: the arrays the kernel computes on
+are the unpacked (rows, W*32) bit matrices, whose last dim is already
+a lane multiple for any bits in {128, 256, 512, ...}. VMEM per program
+~= (BM + M) * bits * 4 (unpacked codes) + BM * M * 4 (weights); at
+BM=8, M=4096, bits=256 that is ~4.3 MB. Scaling past M ~ 10^4 needs a
+column-tiled two-pass top-N (DESIGN.md §4, future).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BM_SEL = 8          # row block (f32 sublane width)
+
+
+def unpack_pm1(words):
+    """(R, W) packed uint32 -> (R, W*32) f32 in {-1, +1} (bit=1 -> +1).
+    Pure shifts + masks; lowers identically on TPU and in interpret
+    mode."""
+    r, w = words.shape
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (r, w, 32), 2)
+    bits01 = ((words[:, :, None] >> shifts) & jnp.uint32(1))
+    return (2.0 * bits01.astype(jnp.float32) - 1.0).reshape(r, w * 32)
+
+
+def _select_kernel(a_ref, b_ref, s_ref, ids_ref, w_ref, *, bits: int,
+                   gamma: float, nsel: int, m_real: int,
+                   use_lsh: bool, use_rank: bool):
+    row0 = pl.program_id(0) * BM_SEL
+    ua = unpack_pm1(a_ref[...])                       # (BM, bits_tot)
+    ub = unpack_pm1(b_ref[...])                       # (Mp, bits_tot)
+    bits_tot = ua.shape[1]
+    gram = jnp.dot(ua, ub.T, preferred_element_type=jnp.float32)
+    d = (float(bits_tot) - gram) * 0.5                # exact integer f32
+
+    mp = d.shape[1]
+    if use_rank:
+        w = jnp.broadcast_to(s_ref[...], (BM_SEL, mp))
+    else:
+        w = jnp.ones((BM_SEL, mp), jnp.float32)
+    if use_lsh:
+        w = w * jnp.exp(-gamma * (d / float(bits)))
+
+    col = jax.lax.broadcasted_iota(jnp.int32, (BM_SEL, mp), 1)
+    row = row0 + jax.lax.broadcasted_iota(jnp.int32, (BM_SEL, mp), 0)
+    w = jnp.where((col == row) | (col >= m_real), -jnp.inf, w)
+
+    ids, vals = [], []
+    for _ in range(nsel):                             # static unroll
+        vals.append(jnp.max(w, axis=1))
+        idx = jnp.argmax(w, axis=1)
+        ids.append(idx)
+        w = jnp.where(col == idx[:, None], -jnp.inf, w)
+    ids_ref[...] = jnp.stack(ids, axis=1).astype(jnp.int32)
+    w_ref[...] = jnp.stack(vals, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "bits", "gamma", "num_neighbors", "use_lsh", "use_rank", "interpret"))
+def fused_select(codes, scores, *, bits: int, gamma: float,
+                 num_neighbors: int, use_lsh: bool = True,
+                 use_rank: bool = True, interpret: bool = True):
+    """Fused Eq. 6-8 + top-N. codes: (M, W) uint32, scores: (M,) f32
+    -> (ids (M, N) int32, top_w (M, N) f32). Pads M to the row-block
+    grid; padded rows are discarded and padded columns never win
+    (masked to -inf in-kernel)."""
+    m, w = codes.shape
+    nsel = min(num_neighbors, m - 1)
+    if nsel <= 0:                       # degenerate M <= 1 federation
+        return (jnp.zeros((m, 0), jnp.int32), jnp.zeros((m, 0), jnp.float32))
+    pm = (-m) % BM_SEL
+    padded = jnp.pad(codes, ((0, pm), (0, 0)))
+    scores_p = jnp.pad(scores.astype(jnp.float32), (0, pm))[None, :]
+    mp = m + pm
+    ids, top_w = pl.pallas_call(
+        functools.partial(_select_kernel, bits=bits, gamma=gamma,
+                          nsel=nsel, m_real=m, use_lsh=use_lsh,
+                          use_rank=use_rank),
+        grid=(mp // BM_SEL,),
+        in_specs=[
+            pl.BlockSpec((BM_SEL, w), lambda i: (i, 0)),
+            pl.BlockSpec((mp, w), lambda i: (0, 0)),        # revisited
+            pl.BlockSpec((1, mp), lambda i: (0, 0)),        # revisited
+        ],
+        out_specs=[
+            pl.BlockSpec((BM_SEL, nsel), lambda i: (i, 0)),
+            pl.BlockSpec((BM_SEL, nsel), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((mp, nsel), jnp.int32),
+            jax.ShapeDtypeStruct((mp, nsel), jnp.float32),
+        ],
+        interpret=interpret,
+    )(padded, padded, scores_p)
+    return ids[:m], top_w[:m]

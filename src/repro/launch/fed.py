@@ -27,13 +27,14 @@ MODEL_FOR = {"mnist": mnist_cnn, "aecg": aecg_tcn, "seeg": seeg_tcn}
 
 def run_federation(dataset: str = "mnist", rounds: int = 10,
                    num_clients: int = 0, seed: int = 0, fed: FedConfig = None,
-                   log=print):
+                   backend: str = "auto", log=print):
     ds_fn = DATASETS[dataset]
     ds = ds_fn(seed=seed) if num_clients == 0 else \
         ds_fn(num_clients=num_clients, seed=seed)
     n_opt, alpha, gamma = PAPER_FED_OPTIMA[dataset]
     fed = fed or FedConfig(num_clients=ds.num_clients, num_neighbors=n_opt,
-                           alpha=alpha, gamma=gamma, rounds=rounds)
+                           alpha=alpha, gamma=gamma, rounds=rounds,
+                           selection_backend=backend)
     mcfg = MODEL_FOR[dataset]()
     apply_fn = functools.partial(apply_client_model, mcfg)
     init_fn = lambda k: init_client_model(mcfg, k)
@@ -54,10 +55,13 @@ def run_federation(dataset: str = "mnist", rounds: int = 10,
     return state, history
 
 
-def dryrun_fed_round(num_clients: int = 256, arch: str = "phi3-medium-14b"):
+def dryrun_fed_round(num_clients: int = 256, arch: str = "phi3-medium-14b",
+                     backend: str = "kernel"):
     """Beyond-paper: lower one WPFed round with 256 REDUCED-transformer
     clients sharded over the production mesh's data axis — proves the
     protocol itself scales out (the paper simulated <=40 clients on GPU).
+    Defaults to the kernel selection backend so the lowering exercises
+    the batched LSH + fused selection kernels under sharding.
 
     Must be called in a fresh process with XLA_FLAGS set (see dryrun.py).
     """
@@ -69,7 +73,8 @@ def dryrun_fed_round(num_clients: int = 256, arch: str = "phi3-medium-14b"):
 
     cfg = get_config(arch).reduced()
     fed = FedConfig(num_clients=num_clients, num_neighbors=8, top_k=4,
-                    local_steps=1, lsh_bits=128, ref_batch=8)
+                    local_steps=1, lsh_bits=128, ref_batch=8,
+                    selection_backend=backend)
     mesh = make_production_mesh()
 
     def apply_fn(params, tokens):
@@ -109,6 +114,8 @@ def dryrun_fed_round(num_clients: int = 256, arch: str = "phi3-medium-14b"):
         compiled = lowered.compile()
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, list):                  # older jax returns [dict]
+        cost = cost[0] if cost else {}
     print(json.dumps({
         "fed_round_clients": m,
         "client_arch": cfg.name,
@@ -128,16 +135,21 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--dryrun", action="store_true",
                     help="lower a 256-client WPFed round on the 16x16 mesh")
+    ap.add_argument("--backend", default="auto",
+                    choices=["auto", "kernel", "oracle"],
+                    help="peer-selection backend (DESIGN.md §4)")
     args = ap.parse_args(argv)
     if args.dryrun:
         import os
         assert "xla_force_host_platform_device_count" in \
             os.environ.get("XLA_FLAGS", ""), \
             "run with XLA_FLAGS=--xla_force_host_platform_device_count=512"
-        dryrun_fed_round()
+        dryrun_fed_round(backend="kernel" if args.backend == "auto"
+                         else args.backend)
         return
     _, history = run_federation(args.dataset, args.rounds,
-                                num_clients=args.clients, seed=args.seed)
+                                num_clients=args.clients, seed=args.seed,
+                                backend=args.backend)
     print(json.dumps(history[-3:], indent=1))
 
 

@@ -1,0 +1,252 @@
+"""Batched LSH + fused selection pipeline (DESIGN.md §4).
+
+Bit-exactness contracts:
+  * batched LSH kernel vs per-client oracle: packed codes identical
+    (projection sums to f32 tolerance — reduction order differs);
+  * fused selection kernel vs jnp oracle vs the unfused
+    hamming -> selection_weights -> top_k composition: ids and weights
+    identical, including the Table-3 ablation switches;
+  * select_partners backends agree, and the protocol round is
+    backend-invariant end to end.
+"""
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_models import FedConfig
+from repro.core import init_state, lsh, make_wpfed_round, neighbor
+from repro.kernels import ops, ref
+from repro.kernels.lsh_projection import (BLOCK_M, CHUNK,
+                                          lsh_project_sums_batched)
+from repro.kernels.selection import fused_select
+
+
+def _codes(m, words, seed=0):
+    raw = jax.random.bernoulli(jax.random.PRNGKey(seed), 0.5, (m, words * 32))
+    return ops.pack_bits(jnp.where(raw, 1.0, -1.0))
+
+
+# ---------------------------------------------------------------------------
+# batched LSH projection kernel
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("m,nchunks,bits", [
+    (8, 1, 128), (6, 2, 256), (13, 3, 128), (16, 1, 512), (1, 2, 128)])
+def test_batched_lsh_codes_match_oracle(m, nchunks, bits):
+    x = jax.random.normal(jax.random.PRNGKey(m * nchunks),
+                          (m, CHUNK * nchunks))
+    codes_k = ops.batched_lsh_codes(x, 11, bits=bits, use_kernel=True)
+    codes_o = ops.batched_lsh_codes(x, 11, bits=bits, use_kernel=False)
+    assert codes_k.shape == (m, bits // 32)
+    assert bool(jnp.all(codes_k == codes_o))
+
+
+@pytest.mark.parametrize("m", [3, 8, 9])
+def test_batched_lsh_sums_close_to_oracle(m):
+    """Sums agree to f32 tolerance (chunked accumulation vs one matmul);
+    includes the M-padding path (m % BLOCK_M != 0)."""
+    x = jax.random.normal(jax.random.PRNGKey(m), (m, CHUNK * 2))
+    pm = (-m) % BLOCK_M
+    sums_k = lsh_project_sums_batched(
+        jnp.pad(x, ((0, pm), (0, 0))), 5, bits=128)[:m]
+    sums_o = ref.lsh_project_sums_batched_ref(x, 5, bits=128)
+    scale = 1 + float(jnp.max(jnp.abs(sums_o)))
+    assert float(jnp.max(jnp.abs(sums_k - sums_o))) < 1e-3 * scale
+
+
+def test_batched_lsh_rows_match_single_client_path():
+    """Row i of the batched pipeline == the single-client Eq. 5 code of
+    client i's pytree (flatten order + projection semantics agree)."""
+    keys = jax.random.split(jax.random.PRNGKey(3), 5)
+    trees = [{"w": jax.random.normal(k, (40, 30)),
+              "b": jax.random.normal(jax.random.fold_in(k, 1), (17,))}
+             for k in keys]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+    flat2d = ops.flatten_params_batched(stacked)
+    batched = ops.batched_lsh_codes(flat2d, 9, bits=128, use_kernel=True)
+    for i, tree in enumerate(trees):
+        single = ops.lsh_code(tree, 9, bits=128, use_kernel=False)
+        assert bool(jnp.all(batched[i] == single)), i
+
+
+def test_batched_lsh_seed_changes_codes():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, CHUNK))
+    a = ops.batched_lsh_codes(x, 0, bits=128)
+    b = ops.batched_lsh_codes(x, 1, bits=128)
+    assert not bool(jnp.all(a == b))
+
+
+def test_batched_lsh_accepts_traced_seed():
+    """The per-round seed is state.round + 1, a traced scalar under jit."""
+    x = jax.random.normal(jax.random.PRNGKey(2), (4, CHUNK))
+    fn = jax.jit(lambda s: ops.batched_lsh_codes(x, s, bits=128))
+    assert bool(jnp.all(fn(jnp.int32(7))
+                        == ops.batched_lsh_codes(x, 7, bits=128)))
+
+
+# ---------------------------------------------------------------------------
+# fused selection: kernel vs oracle vs unfused composition
+# ---------------------------------------------------------------------------
+def _unfused(codes, scores, bits, gamma, n, use_lsh=True, use_rank=True):
+    d = lsh.distance_matrix(codes, use_kernel=False)
+    d_norm = lsh.normalized_distance(d, bits)
+    w = neighbor.selection_weights(scores, d_norm, gamma,
+                                   use_lsh=use_lsh, use_rank=use_rank)
+    ids, mask = neighbor.select_neighbors(w, n)
+    top_w, _ = jax.lax.top_k(w, min(n, codes.shape[0] - 1))
+    return ids, mask, top_w
+
+
+@pytest.mark.parametrize("m,words,n", [
+    (6, 4, 3), (10, 4, 9), (32, 8, 12), (37, 8, 5), (64, 16, 16), (9, 4, 8)])
+def test_fused_selection_matches_oracle_and_unfused(m, words, n):
+    codes = _codes(m, words, seed=m * words)
+    scores = jax.random.uniform(jax.random.PRNGKey(m + n), (m,))
+    kw = dict(bits=words * 32, gamma=1.0, num_neighbors=n)
+    ids_k, w_k = fused_select(codes, scores, **kw)
+    ids_o, w_o = ref.fused_select_ref(codes, scores, **kw)
+    ids_u, mask_u, w_u = _unfused(codes, scores, words * 32, 1.0, n)
+    assert bool(jnp.all(ids_k == ids_o)) and bool(jnp.all(w_k == w_o))
+    assert bool(jnp.all(ids_k == ids_u)) and bool(jnp.all(w_k == w_u))
+    assert bool(jnp.all(mask_u))
+
+
+@pytest.mark.parametrize("use_lsh,use_rank", [(True, False), (False, True)])
+@pytest.mark.parametrize("gamma", [0.1, 1.0, 10.0])
+def test_fused_selection_ablation_switches(use_lsh, use_rank, gamma):
+    m, words, n = 12, 4, 5
+    codes = _codes(m, words, seed=42)
+    scores = jax.random.uniform(jax.random.PRNGKey(1), (m,))
+    kw = dict(bits=words * 32, gamma=gamma, num_neighbors=n,
+              use_lsh=use_lsh, use_rank=use_rank)
+    ids_k, w_k = fused_select(codes, scores, **kw)
+    ids_o, w_o = ref.fused_select_ref(codes, scores, **kw)
+    ids_u, _, w_u = _unfused(codes, scores, words * 32, gamma,
+                             n, use_lsh=use_lsh, use_rank=use_rank)
+    assert bool(jnp.all(ids_k == ids_o)) and bool(jnp.all(w_k == w_o))
+    assert bool(jnp.all(ids_k == ids_u)) and bool(jnp.all(w_k == w_u))
+
+
+@pytest.mark.parametrize("m", [5, 8, 9, 17])
+def test_fused_selection_excludes_self_and_padding(m):
+    """Self-exclusion plus the row/column padding edge: m deliberately
+    not a BM_SEL multiple; padded columns must never be selected."""
+    codes = _codes(m, 4, seed=m)
+    scores = jnp.ones((m,))                       # uniform -> ties galore
+    ids, w = fused_select(codes, scores, bits=128, gamma=1.0,
+                          num_neighbors=m - 1)
+    idn = np.asarray(ids)
+    for i in range(m):
+        assert i not in idn[i]
+        assert set(idn[i]) == set(range(m)) - {i}   # all real, no padding
+    assert bool(jnp.all(jnp.isfinite(w)))
+
+
+def test_fused_selection_degenerate_single_client():
+    """M=1 federation: no selectable peers -> empty (1, 0) outputs on
+    both backends (the kernel path must not hit a zero-length stack)."""
+    codes = _codes(1, 4, seed=0)
+    scores = jnp.ones((1,))
+    for fn in (fused_select, ref.fused_select_ref):
+        ids, w = fn(codes, scores, bits=128, gamma=1.0, num_neighbors=3)
+        assert ids.shape == (1, 0) and w.shape == (1, 0)
+
+
+def test_fused_selection_tie_breaking_matches_top_k():
+    """Identical codes + identical scores -> all weights tie; the fused
+    iterative argmax must reproduce lax.top_k's ascending-index order."""
+    m, n = 11, 4
+    codes = jnp.tile(_codes(1, 4, seed=0), (m, 1))
+    scores = jnp.full((m,), 0.5)
+    ids_k, w_k = fused_select(codes, scores, bits=128, gamma=1.0,
+                              num_neighbors=n)
+    ids_u, _, w_u = _unfused(codes, scores, 128, 1.0, n)
+    assert bool(jnp.all(ids_k == ids_u))
+    assert bool(jnp.all(w_k == w_u))
+
+
+# ---------------------------------------------------------------------------
+# select_partners entry point
+# ---------------------------------------------------------------------------
+def _fed(m, **kw):
+    base = dict(num_clients=m, num_neighbors=4, top_k=2, lsh_bits=128)
+    base.update(kw)
+    return FedConfig(**base)
+
+
+def test_select_partners_backends_agree():
+    m = 14
+    codes = _codes(m, 4, seed=7)
+    scores = jax.random.uniform(jax.random.PRNGKey(2), (m,))
+    fed = _fed(m)
+    ids_k, mask_k = neighbor.select_partners(codes, scores, fed,
+                                             backend="kernel")
+    ids_o, mask_o = neighbor.select_partners(codes, scores, fed,
+                                             backend="oracle")
+    assert bool(jnp.all(ids_k == ids_o))
+    assert bool(jnp.all(mask_k == mask_o)) and bool(jnp.all(mask_k))
+
+
+def test_select_partners_random_ablation_needs_rng():
+    m = 8
+    codes = _codes(m, 4, seed=3)
+    scores = jnp.zeros((m,))
+    fed = _fed(m, use_lsh=False, use_rank=False)
+    ids, mask = neighbor.select_partners(codes, scores, fed,
+                                         rng=jax.random.PRNGKey(0))
+    idn = np.asarray(ids)
+    for i in range(m):
+        assert i not in idn[i][np.asarray(mask[i])]
+    with pytest.raises(AssertionError):
+        neighbor.select_partners(codes, scores, fed)
+
+
+def test_select_partners_rejects_unknown_backend():
+    fed = _fed(6, selection_backend="cuda")
+    with pytest.raises(ValueError):
+        neighbor.select_partners(_codes(6, 4), jnp.zeros((6,)), fed)
+
+
+# ---------------------------------------------------------------------------
+# protocol integration: backend invariance + per-round LSH seed
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def two_rounds(tiny_fed):
+    f = tiny_fed
+    out = {}
+    for backend in ("oracle", "kernel"):
+        fed = dataclasses.replace(f["fed"], selection_backend=backend)
+        state = init_state(f["apply_fn"], f["init_fn"], f["opt"], fed,
+                           jax.random.PRNGKey(0))
+        round_fn = jax.jit(make_wpfed_round(f["apply_fn"], f["opt"], fed))
+        s1, m1 = round_fn(state, f["data"])
+        s2, m2 = round_fn(s1, f["data"])
+        out[backend] = (state, s1, s2, m1, m2)
+    return out
+
+
+def test_round_backend_invariant(two_rounds):
+    o, k = two_rounds["oracle"], two_rounds["kernel"]
+    assert bool(jnp.all(o[0].codes == k[0].codes))          # init
+    for r in (3, 4):                                        # metrics
+        assert bool(jnp.all(o[r]["neighbor_ids"] == k[r]["neighbor_ids"]))
+    assert bool(jnp.all(o[2].codes == k[2].codes))          # after 2 rounds
+
+
+def test_round_threads_per_round_lsh_seed(two_rounds, tiny_fed):
+    """Regression (ISSUE satellite): codes published at the end of round
+    r hash with the shared per-round seed r+1 — not the dead seed=0 —
+    and all clients use the same seed (distances stay comparable)."""
+    fed = tiny_fed["fed"]
+    _, s1, s2, _, _ = two_rounds["oracle"]
+    for state, seed in ((s1, 1), (s2, 2)):
+        expect = lsh.stacked_lsh_codes(state.params, seed=seed,
+                                       bits=fed.lsh_bits, backend="oracle")
+        assert bool(jnp.all(state.codes == expect))
+    # the seed is actually consumed: seed-0 codes of the same params differ
+    stale = lsh.stacked_lsh_codes(s1.params, seed=0, bits=fed.lsh_bits,
+                                  backend="oracle")
+    assert not bool(jnp.all(s1.codes == stale))
