@@ -1,18 +1,20 @@
 """Kernel micro-benchmarks: LSH projection (single + batched), Hamming,
-and the fused selection path (interpret-mode wall time is NOT TPU time —
-the derived column is the analytic TPU-v5e estimate from FLOP/byte
-counts; see EXPERIMENTS.md).
+the fused selection path, and the fused all-in-one exchange
+(interpret-mode wall time is NOT TPU time — the derived column is the
+analytic TPU-v5e estimate from FLOP/byte counts; see EXPERIMENTS.md).
 
-The selection rows time the two *jnp* implementations the round can
-actually run on CPU: the fused oracle (popcount + discrete-domain exp
-LUT -> top-N; the bit-exact CPU twin of the Pallas kernel's Gram-matmul
-form, DESIGN.md §4) against the unfused composition (hamming ->
-normalized_distance -> selection_weights -> top_k). The measured
-speedup is the fused path's win in the distance/weight stages (LUT
-gather instead of M^2 transcendentals, no (M, M) intermediate
-materializations); lax.top_k is a shared fixed cost. `python
-benchmarks/kernel_micro.py` writes the machine-readable baseline to
-benchmarks/BENCH_selection.json.
+The selection and exchange rows time the two *jnp* implementations the
+round can actually run on CPU: the fused oracles (the bit-exact CPU
+twins of the Pallas kernels, DESIGN.md §4 / §7) against the unfused
+compositions. For selection that is hamming -> normalized_distance ->
+selection_weights -> top_k (the fused win is the distance/weight
+stages; lax.top_k is a shared fixed cost). For exchange it is the three
+scattered round calls — vmapped cross_entropy, lsh_verification_mask,
+aggregate_neighbor_outputs — whose three separate log-softmax passes
+over the same (M, N, R, C) logit tensor the fused form collapses into
+one. `python benchmarks/kernel_micro.py` writes the machine-readable
+baselines to benchmarks/BENCH_selection.json and
+benchmarks/BENCH_exchange.json.
 """
 from __future__ import annotations
 
@@ -24,7 +26,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import lsh, neighbor
+from repro.core import distill, lsh, neighbor, verify
 from repro.kernels import ops, ref
 from repro.kernels.lsh_projection import CHUNK, lsh_project_sums_batched
 from repro.kernels.selection import fused_select
@@ -33,6 +35,8 @@ PEAK_FLOPS = 197e12
 HBM_BW = 819e9
 BENCH_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                           "BENCH_selection.json")
+BENCH_EXCHANGE_JSON = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "BENCH_exchange.json")
 
 
 def _time(fn, *args, iters=3):
@@ -121,12 +125,46 @@ def bench_fused_selection(m=256, bits=256, n=16, gamma=1.0, iters=10):
             "tpu_est_us": round(tpu_est_us, 3)}
 
 
+def _unfused_exchange(own, nb, y, sel):
+    l_ij = jax.vmap(lambda yl, yy: jax.vmap(
+        lambda l: distill.cross_entropy(l, yy))(yl))(nb, y)
+    valid = jax.vmap(verify.lsh_verification_mask)(own, nb, sel)
+    target, has = jax.vmap(distill.aggregate_neighbor_outputs)(nb, valid)
+    return l_ij, valid, target, has
+
+
+def bench_fused_exchange(m=128, n=8, r=32, c=10, iters=10):
+    """Fused exchange oracle vs the three scattered round calls."""
+    key = jax.random.PRNGKey(m + n)
+    own = jax.random.normal(key, (m, r, c)) * 3
+    nb = jax.random.normal(jax.random.fold_in(key, 1), (m, n, r, c)) * 3
+    y = jax.random.randint(jax.random.fold_in(key, 2), (m, r), 0, c)
+    sel = jax.random.bernoulli(jax.random.fold_in(key, 3), 0.8, (m, n))
+
+    unfused_us = _time(jax.jit(_unfused_exchange), own, nb, y, sel,
+                       iters=iters)
+    fused_us = _time(jax.jit(ref.all_in_one_exchange_ref), own, nb, y, sel,
+                     iters=iters)
+    # TPU estimate: the neighbor-logit tensor dominates both terms —
+    # ~1 fused read (vs 3 unfused) at ~10 VPU flops/element for the
+    # shared log-softmax + CE/KL/mean derivations.
+    elems = m * n * r * c
+    tpu_est_us = max(10.0 * elems / PEAK_FLOPS, elems * 4 / HBM_BW) * 1e6
+    return {"m": m, "n": n, "r": r, "c": c,
+            "unfused_us": round(unfused_us, 1),
+            "fused_us": round(fused_us, 1),
+            "speedup": round(unfused_us / fused_us, 2),
+            "tpu_est_us": round(tpu_est_us, 3)}
+
+
 def main(argv=None, log=print):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sizes / single iteration (CI budget)")
     ap.add_argument("--json-out", default=BENCH_JSON,
                     help="selection-baseline path ('' disables)")
+    ap.add_argument("--exchange-json-out", default=BENCH_EXCHANGE_JSON,
+                    help="exchange-baseline path ('' disables)")
     args = ap.parse_args(argv)
     iters = 1 if args.smoke else 3
 
@@ -150,6 +188,18 @@ def main(argv=None, log=print):
         rows.append((f"select_fused_{r['m']}", r["fused_us"],
                      r["tpu_est_us"]))
         log(f"# fused selection speedup @ M={r['m']}: {r['speedup']}x")
+
+    exc_shapes = ((32, 4, 8, 10),) if args.smoke else \
+        ((64, 8, 32, 10), (128, 8, 32, 10), (256, 16, 32, 10))
+    exc_rows = [bench_fused_exchange(m, n, r, c, iters=iters)
+                for m, n, r, c in exc_shapes]
+    for r in exc_rows:
+        tag = f"{r['m']}x{r['n']}x{r['r']}x{r['c']}"
+        rows.append((f"exchange_unfused_{tag}", r["unfused_us"],
+                     r["tpu_est_us"]))
+        rows.append((f"exchange_fused_{tag}", r["fused_us"],
+                     r["tpu_est_us"]))
+        log(f"# fused exchange speedup @ {tag}: {r['speedup']}x")
     for name, us, est in rows:
         log(f"{name},{us:.1f},{est:.3f}")
 
@@ -168,6 +218,21 @@ def main(argv=None, log=print):
                                "for the fused kernel"},
                       f, indent=1)
         log(f"# wrote {args.json_out}")
+    if args.exchange_json_out and not args.smoke:
+        best = max(exc_rows, key=lambda r: r["speedup"])
+        with open(args.exchange_json_out, "w") as f:
+            json.dump({"exchange": exc_rows,
+                       "measured_speedup": best["speedup"],
+                       "at": {k: best[k] for k in ("m", "n", "r", "c")},
+                       "note": "CPU jnp wall times (fused exchange "
+                               "oracle vs the three scattered round "
+                               "calls). The fused win is the single "
+                               "shared log-softmax pass over the "
+                               "(M, N, R, C) neighbor logits vs three. "
+                               "tpu_est_us is the analytic v5e bound "
+                               "for the fused kernel"},
+                      f, indent=1)
+        log(f"# wrote {args.exchange_json_out}")
     return rows
 
 

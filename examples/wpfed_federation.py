@@ -26,10 +26,19 @@ def main():
     ap.add_argument("--rounds", type=int, default=12)
     ap.add_argument("--clients", type=int, default=24)
     ap.add_argument("--local-steps", type=int, default=4)
+    ap.add_argument("--backend", default="auto",
+                    choices=["auto", "kernel", "oracle"],
+                    help="selection + exchange backend (DESIGN.md §4, §7)")
+    ap.add_argument("--ref-mode", default="personal",
+                    choices=["personal", "public"],
+                    help="public: shared reference set, M forwards per "
+                         "exchange instead of M*N (DESIGN.md §7)")
     args = ap.parse_args()
 
     fed = FedConfig(num_clients=args.clients, num_neighbors=6, top_k=4,
-                    local_steps=args.local_steps, lsh_bits=256)
+                    local_steps=args.local_steps, lsh_bits=256,
+                    selection_backend=args.backend,
+                    exchange_backend=args.backend, ref_mode=args.ref_mode)
     ds = make_mnist_federated(num_clients=args.clients, per_client=200,
                               ref_per_client=32)
     data = {k: jnp.asarray(v) for k, v in ds.stacked().items()}

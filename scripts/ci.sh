@@ -1,6 +1,7 @@
 #!/usr/bin/env bash
 # One-command verify recipe: tier-1 tests + kernel micro-benchmark
-# (smoke mode). Usage: scripts/ci.sh [extra pytest args]
+# (smoke mode — covers LSH projection, Hamming, fused selection AND the
+# fused all-in-one exchange). Usage: scripts/ci.sh [extra pytest args]
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"

@@ -79,11 +79,18 @@ class FedConfig:
     lr: float = 1e-3
     ref_batch: int = 64            # reference-set size exchanged per round
     seed: int = 0
-    # peer-selection backend (DESIGN.md §4): "kernel" runs the batched
-    # LSH projection + fused selection Pallas kernels (interpret-mode
-    # off-TPU), "oracle" the bit-exact jnp twins, "auto" kernel on TPU /
-    # oracle elsewhere.
-    selection_backend: str = "auto"
+    # kernel-backed subsystem backends, one per subsystem, all resolved
+    # by repro.core.backends.resolve: "kernel" runs the Pallas kernels
+    # (interpret-mode off-TPU), "oracle" the bit-exact jnp twins,
+    # "auto" kernel on TPU / oracle elsewhere.
+    selection_backend: str = "auto"   # Eq. 5-8 selection (DESIGN.md §4)
+    exchange_backend: str = "auto"    # Eq. 3 + §3.5 exchange (DESIGN.md §7)
+    # reference-set regime (DESIGN.md §7): "personal" exchanges logits
+    # on each client's own X_i^ref (M*N neighbor forwards via gathered
+    # params — the paper's point-to-point protocol); "public" evaluates
+    # ONE shared reference set (the abstract's public reference dataset)
+    # so the exchange needs only M forwards and a logit gather.
+    ref_mode: str = "personal"
     # verification toggles (ablations / attack studies)
     use_lsh: bool = True           # w/o LSH ablation
     use_rank: bool = True          # w/o Rank ablation

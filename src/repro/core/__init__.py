@@ -1,9 +1,20 @@
 """The paper's primary contribution: the WPFed trust-free personalized
 decentralized learning protocol (LSH similarity, crowd-sourced ranking,
-weighted neighbor selection, verification, blockchain announcements)."""
+weighted neighbor selection, all-in-one exchange, verification,
+blockchain announcements)."""
+from repro.core.exchange import (  # noqa: F401
+    ExchangeResult,
+    all_in_one_exchange,
+)
 from repro.core.protocol import (  # noqa: F401
+    Announcement,
     FedState,
+    SelectResult,
+    announce_phase,
     evaluate,
+    exchange_phase,
     init_state,
     make_wpfed_round,
+    select_phase,
+    update_phase,
 )

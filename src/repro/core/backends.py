@@ -1,0 +1,38 @@
+"""Backend resolution for kernel-backed protocol subsystems.
+
+`FedConfig` carries one backend field per kernel-backed subsystem
+(`selection_backend`, `exchange_backend`); both accept the same three
+values and resolve through this single helper so the string validation
+lives in exactly one place (DESIGN.md §4, §7):
+
+  "kernel" -> the Pallas kernel path (interpret-mode off-TPU — the
+              correctness path, not a CPU speedup),
+  "oracle" -> the bit-exact pure-jnp twin,
+  "auto"   -> kernel on TPU, oracle elsewhere.
+
+This module deliberately imports only jax. `repro.core` modules import
+it directly; `repro.kernels.ops.resolve_backend` delegates here via a
+function-level import (`repro.core.__init__` pulls in the whole
+protocol, so a module-level import from the kernels package would be a
+cycle).
+"""
+from __future__ import annotations
+
+import jax
+
+BACKENDS = ("auto", "kernel", "oracle")
+
+
+def interpret() -> bool:
+    """Pallas kernels run in interpret mode everywhere but TPU."""
+    return jax.default_backend() != "tpu"
+
+
+def resolve(backend: str) -> str:
+    """Validate and resolve a backend string to "kernel" or "oracle"."""
+    if backend == "auto":
+        return "kernel" if jax.default_backend() == "tpu" else "oracle"
+    if backend not in ("kernel", "oracle"):
+        raise ValueError(
+            f"unknown backend: {backend!r} (expected one of {BACKENDS})")
+    return backend

@@ -79,6 +79,7 @@ class Block:
     index: int
     prev_hash: str
     payload: Dict[str, Any]            # round announcements + reveals
+    # 0.0 = "unstamped" (genesis); publish_round stamps wall-clock time
     timestamp: float = field(default_factory=lambda: 0.0)
     hash: str = ""
 
@@ -86,6 +87,7 @@ class Block:
         h = hashlib.sha256()
         h.update(self.prev_hash.encode())
         h.update(str(self.index).encode())
+        h.update(repr(self.timestamp).encode())
         h.update(json.dumps(self.payload, sort_keys=True,
                             default=str).encode())
         return h.hexdigest()
@@ -110,7 +112,8 @@ class Blockchain:
             "reveals": {str(k): list(map(int, v))
                         for k, v in (reveals or {}).items()},
         }
-        blk = Block(len(self.blocks), self.blocks[-1].hash, payload)
+        blk = Block(len(self.blocks), self.blocks[-1].hash, payload,
+                    timestamp=time.time())
         blk.hash = blk.compute_hash()
         self.blocks.append(blk)
         return blk

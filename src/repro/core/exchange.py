@@ -1,0 +1,71 @@
+"""All-in-one reference-set exchange (WPFed Eq. 3 + §3.5 + Alg. 1's
+distillation target — the paper's headline "single exchange" protocol).
+
+The paper's contribution is that ONE reference-set logit exchange
+simultaneously (1) transfers knowledge (the distillation target),
+(2) evaluates model quality (the per-neighbor CE losses that feed the
+Eq. 7 rankings), and (3) verifies similarity (§3.5's output-KL
+upper-half filter). `all_in_one_exchange` is the single protocol entry
+point for all three, mirroring `core.neighbor.select_partners` for the
+selection subsystem (DESIGN.md §7):
+
+  "kernel" -> fused Pallas kernel (one shared neighbor log-softmax
+              while the (N, R, C) tile is in VMEM; interpret off-TPU),
+  "oracle" -> the bit-exact jnp twin (ref.all_in_one_exchange_ref),
+  "auto"   -> kernel on TPU, oracle elsewhere.
+
+The unfused pieces (`distill.cross_entropy`,
+`verify.lsh_verification_mask`, `distill.aggregate_neighbor_outputs`)
+remain the semantic reference — tests assert both fused paths match
+their composition bit-exactly.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import backends
+from repro.kernels import ref
+from repro.kernels.exchange import fused_exchange
+
+
+class ExchangeResult(NamedTuple):
+    """Everything one reference-set exchange yields, for all M clients."""
+    l_ij: jnp.ndarray        # (M, N) f32 — Eq. 3 CE of neighbor j on X_i^ref
+    valid_mask: jnp.ndarray  # (M, N) bool — §3.5 survivors (selected & upper half)
+    target_ref: jnp.ndarray  # (M, R, C) f32 — masked mean of valid neighbor logits
+    has_target: jnp.ndarray  # (M,) bool — any neighbor passed (else zeros target)
+
+
+def all_in_one_exchange(own_logits, neighbor_logits, y_ref, sel_mask, fed,
+                        *, backend: str | None = None) -> ExchangeResult:
+    """Distill + evaluate + verify in one pass over the exchanged logits.
+
+    own_logits: (M, R, C) — each client's outputs on its reference set;
+    neighbor_logits: (M, N, R, C) — the selected neighbors' outputs on
+    that same set (gathered, DESIGN.md §3); y_ref: (M, R) int labels;
+    sel_mask: (M, N) bool selected slots; fed: FedConfig (consumes
+    lsh_verification and exchange_backend). `backend` overrides
+    fed.exchange_backend when given.
+
+    With fed.lsh_verification=False the §3.5 filter is skipped and
+    valid_mask == sel_mask (the "w/o verification" ablation).
+    """
+    m, n = sel_mask.shape
+    if n == 0:                         # degenerate M <= 1 federation
+        r, c = own_logits.shape[-2:]
+        return ExchangeResult(
+            jnp.zeros((m, 0), jnp.float32), jnp.zeros((m, 0), bool),
+            jnp.zeros((m, r, c), jnp.float32), jnp.zeros((m,), bool))
+    resolved = backends.resolve(backend or fed.exchange_backend)
+    if resolved == "kernel":
+        out = fused_exchange(own_logits, neighbor_logits, y_ref, sel_mask,
+                             lsh_verification=fed.lsh_verification,
+                             interpret=backends.interpret())
+    else:
+        out = ref.all_in_one_exchange_ref(
+            own_logits, neighbor_logits, y_ref, sel_mask,
+            lsh_verification=fed.lsh_verification)
+    return ExchangeResult(*out)

@@ -18,6 +18,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import backends
 from repro.kernels import ops
 
 
@@ -39,7 +40,7 @@ def stacked_lsh_codes(stacked_params, seed, bits: int = 256,
     may be a traced scalar. Oracle backend is bit-exact at the code
     level (tested)."""
     flat2d = ops.flatten_params_batched(stacked_params)
-    use_kernel = ops.resolve_backend(backend) == "kernel"
+    use_kernel = backends.resolve(backend) == "kernel"
     return ops.batched_lsh_codes(flat2d, seed, bits=bits,
                                  use_kernel=use_kernel)
 

@@ -23,6 +23,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import backends
 from repro.kernels import ops, ref
 from repro.kernels.selection import fused_select
 
@@ -73,12 +74,12 @@ def select_partners(codes, scores, fed, *, rng=None, backend=None):
                               fed.gamma, use_lsh=False, use_rank=False,
                               rng=rng)
         return select_neighbors(w, n)
-    resolved = ops.resolve_backend(backend or fed.selection_backend)
+    resolved = backends.resolve(backend or fed.selection_backend)
     if resolved == "kernel":
         ids, top_w = fused_select(
             codes, scores, bits=fed.lsh_bits, gamma=fed.gamma,
             num_neighbors=n, use_lsh=fed.use_lsh, use_rank=fed.use_rank,
-            interpret=ops._interpret())
+            interpret=backends.interpret())
     else:
         ids, top_w = ref.fused_select_ref(
             codes, scores, bits=fed.lsh_bits, gamma=fed.gamma,

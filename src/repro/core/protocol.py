@@ -1,21 +1,25 @@
 """The WPFed round (Algorithm 1), fully jit-able and vmapped over the
-client axis. One call = one federation iteration for all M clients:
+client axis, decomposed into four typed phase functions so variant
+rounds (async/gossip epochs, public-reference serving) can reuse the
+phases instead of forking a monolith (DESIGN.md §7):
 
-  1. verify last round's ranking reveals against commitments (§3.6)
-  2. LSH distances (Eq. 6) + ranking scores (Eq. 7) -> weights (Eq. 8)
-  3. top-N personalized neighbor selection
-  4. P2P reference-set logit exchange (the collective-friendly form of
-     the paper's point-to-point sends — DESIGN.md §3)
-  5. per-neighbor loss (Eq. 3) + LSH verification filter (§3.5)
-  6. local model update on the combined objective (Alg. 1 l.19)
-  7. new LSH codes, rankings, commitments -> next announcement
+  select_phase    §3.6 reveal verification + Eq. 6-8 fused neighbor
+                  selection (steps 1-3)
+  exchange_phase  the all-in-one reference-set exchange: P2P logit
+                  gather + Eq. 3 losses + §3.5 verification + the
+                  distillation target, in one kernel-backed pass
+                  (steps 4-6a; core.exchange / DESIGN.md §3, §7)
+  update_phase    local model updates on the combined objective
+                  (Alg. 1 l.19, step 6b)
+  announce_phase  new LSH codes, rankings, commitments (step 7)
 
-Client models are homogeneous pytrees stacked on a leading (M,) axis;
-`launch/fed.py` shards that axis across the mesh for TPU-scale runs.
+`make_wpfed_round` composes them into one federation iteration for all
+M clients. Client models are homogeneous pytrees stacked on a leading
+(M,) axis; `launch/fed.py` shards that axis across the mesh for
+TPU-scale runs.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, Dict, NamedTuple, Tuple
 
 import jax
@@ -24,7 +28,10 @@ import jax.numpy as jnp
 from repro.configs.paper_models import FedConfig
 from repro.core import distill, lsh, neighbor, ranking, verify
 from repro.core.chain import fnv1a_commit
+from repro.core.exchange import ExchangeResult, all_in_one_exchange
 from repro.optim.optimizers import Optimizer, apply_updates
+
+REF_MODES = ("personal", "public")
 
 
 class FedState(NamedTuple):
@@ -37,6 +44,21 @@ class FedState(NamedTuple):
     round: jnp.ndarray   # scalar int32
 
 
+class SelectResult(NamedTuple):
+    """Output of select_phase: who talks to whom this round."""
+    ids: jnp.ndarray            # (M, N) int32 — selected partner ids
+    sel_mask: jnp.ndarray       # (M, N) bool — real (non-padded) slots
+    scores: jnp.ndarray         # (M,) f32 — Eq. 7 ranking scores
+    reporter_mask: jnp.ndarray  # (M,) bool — §3.6 honest reporters
+
+
+class Announcement(NamedTuple):
+    """Output of announce_phase: next round's published state."""
+    codes: jnp.ndarray        # (M, W) uint32
+    rankings: jnp.ndarray     # (M, N) int32
+    commitments: jnp.ndarray  # (M,) uint32
+
+
 def init_state(apply_fn, init_fn, optimizer: Optimizer, fed: FedConfig,
                key) -> FedState:
     """init_fn(key) -> one client's params."""
@@ -44,7 +66,7 @@ def init_state(apply_fn, init_fn, optimizer: Optimizer, fed: FedConfig,
     keys = jnp.stack(list(jax.random.split(key, m)))
     params = jax.vmap(init_fn)(keys)
     opt_state = jax.vmap(optimizer.init)(params)
-    # round-0 codes use the round-0 LSH seed (see round_fn step 7)
+    # round-0 codes use the round-0 LSH seed (see announce_phase)
     codes = lsh.stacked_lsh_codes(params, seed=0, bits=fed.lsh_bits,
                                   backend=fed.selection_backend)
     n = min(fed.num_neighbors, m - 1)
@@ -54,6 +76,111 @@ def init_state(apply_fn, init_fn, optimizer: Optimizer, fed: FedConfig,
                     jax.random.fold_in(key, 1), jnp.zeros((), jnp.int32))
 
 
+# ---------------------------------------------------------------------------
+# phases
+# ---------------------------------------------------------------------------
+def select_phase(state: FedState, fed: FedConfig, *,
+                 rng=None) -> SelectResult:
+    """Steps 1-3: §3.6 reveal verification -> Eq. 7 ranking scores ->
+    fused Eq. 6-8 top-N partner selection (DESIGN.md §4). `rng` is
+    consumed only by the random-selection ablation (use_lsh=False,
+    use_rank=False)."""
+    m = fed.num_clients
+    if fed.rank_verification:
+        reporter_mask = verify.verify_rankings_fnv(
+            state.rankings, state.commitments)
+    else:
+        reporter_mask = jnp.ones((m,), bool)
+    scores = ranking.ranking_scores(
+        jnp.where(reporter_mask[:, None], state.rankings, -1),
+        m, fed.top_k)
+    ids, sel_mask = neighbor.select_partners(
+        state.codes, scores, fed,
+        rng=rng if not (fed.use_lsh or fed.use_rank) else None)
+    return SelectResult(ids, sel_mask, scores, reporter_mask)
+
+
+def exchange_phase(apply_fn: Callable, fed: FedConfig, params,
+                   data: Dict[str, jnp.ndarray],
+                   sel: SelectResult) -> ExchangeResult:
+    """Steps 4-6a: evaluate reference sets and run the all-in-one
+    exchange (knowledge transfer + quality evaluation + similarity
+    verification in one pass — core.exchange, DESIGN.md §7).
+
+    ref_mode="personal": neighbors answer each client's OWN reference
+    set, so the logit web needs M*N forwards over gathered neighbor
+    params (the collective-friendly form of the paper's point-to-point
+    sends, DESIGN.md §3).
+
+    ref_mode="public": every client evaluates the SHARED reference set
+    (row 0 of data["x_ref"] — the abstract's public reference dataset)
+    exactly once; the (M, N, R, C) logit web is then a pure gather of
+    those M outputs. M forwards instead of M*N and no neighbor-param
+    gather, which is what makes large-M federations affordable.
+    """
+    if fed.ref_mode not in REF_MODES:
+        raise ValueError(f"unknown ref_mode: {fed.ref_mode!r} "
+                         f"(expected one of {REF_MODES})")
+    m = fed.num_clients
+    if fed.ref_mode == "public":
+        x_shared = data["x_ref"][0]
+        own_ref = jax.vmap(apply_fn, in_axes=(0, None))(
+            params, x_shared)                           # (M, R, C)
+        y_web = own_ref[sel.ids]                        # (M, N, R, C) gather
+        y_ref = jnp.broadcast_to(data["y_ref"][0][None],
+                                 (m,) + data["y_ref"].shape[1:])
+    else:
+        nb_params = jax.tree.map(lambda p: p[sel.ids], params)  # (M, N, ...)
+        y_web = jax.vmap(                               # over clients i
+            jax.vmap(apply_fn, in_axes=(0, None))       # over neighbors j
+        )(nb_params, data["x_ref"])                     # (M, N, R, C)
+        own_ref = jax.vmap(apply_fn)(params, data["x_ref"])     # (M, R, C)
+        y_ref = data["y_ref"]
+    return all_in_one_exchange(own_ref, y_web, y_ref, sel.sel_mask, fed)
+
+
+def update_phase(apply_fn: Callable, optimizer: Optimizer, fed: FedConfig,
+                 params, opt_state, data: Dict[str, jnp.ndarray],
+                 exch: ExchangeResult, rng):
+    """Step 6b: per-client local updates on the combined objective
+    (Alg. 1 l.19), distilling toward the exchange's aggregated target.
+    Returns (params, opt_state, train_metrics)."""
+    m = fed.num_clients
+    upd_keys = jax.vmap(
+        lambda i: jax.random.fold_in(rng, i))(jnp.arange(m))
+    data_per = {k: data[k] for k in
+                ("x_train", "y_train", "x_ref", "y_ref")}
+    if fed.ref_mode == "public":        # distill on the shared set
+        # broadcast x_ref AND y_ref so the pair stays consistent for
+        # any consumer (only x_ref is read by _local_update today)
+        for k in ("x_ref", "y_ref"):
+            data_per[k] = jnp.broadcast_to(data[k][0][None],
+                                           data[k].shape)
+    return batched_local_update(
+        apply_fn, optimizer, fed, params, opt_state, data_per,
+        exch.target_ref, exch.has_target, upd_keys)
+
+
+def announce_phase(fed: FedConfig, params, sel: SelectResult,
+                   exch: ExchangeResult, round_idx) -> Announcement:
+    """Step 7: announcements for the next round.
+
+    Codes consumed in round r+1 hash with the shared per-round seed
+    r+1: every client projects with the SAME Rademacher matrix
+    (distances stay comparable) and the projection rotates each round,
+    so a §3.4 attacker cannot precompute a code that stays close to a
+    victim across rounds (regression-tested)."""
+    codes = lsh.stacked_lsh_codes(params, seed=round_idx + 1,
+                                  bits=fed.lsh_bits,
+                                  backend=fed.selection_backend)
+    rankings = jax.vmap(ranking.make_ranking)(sel.ids, exch.l_ij,
+                                              sel.sel_mask)
+    return Announcement(codes, rankings, fnv1a_commit(rankings, salt=0))
+
+
+# ---------------------------------------------------------------------------
+# local updates (shared with core.baselines)
+# ---------------------------------------------------------------------------
 def _local_update(apply_fn, optimizer, fed: FedConfig, params, opt_state,
                   data_i, target_ref, has_target, rng):
     """`local_steps` minibatch steps on the combined loss for ONE client."""
@@ -96,87 +223,46 @@ def batched_local_update(apply_fn, optimizer, fed: FedConfig, params,
                              has_target, keys))
 
 
+# ---------------------------------------------------------------------------
+# the composed round
+# ---------------------------------------------------------------------------
 def make_wpfed_round(apply_fn: Callable, optimizer: Optimizer,
                      fed: FedConfig):
     """Returns round_fn(state, data) -> (state, metrics). `data` is the
     stacked federated dataset dict (see data.federated.stacked)."""
-    m = fed.num_clients
 
     def round_fn(state: FedState, data: Dict[str, jnp.ndarray]
                  ) -> Tuple[FedState, Dict[str, jnp.ndarray]]:
         rng, rng_sel, rng_upd = jax.random.split(state.rng, 3)
 
-        # --- 1. §3.6 reveal verification --------------------------------
-        if fed.rank_verification:
-            reporter_mask = verify.verify_rankings_fnv(
-                state.rankings, state.commitments)
-        else:
-            reporter_mask = jnp.ones((m,), bool)
-
-        # --- 2-3. neighbor selection (Eq. 6-8, fused; DESIGN.md §4) ------
-        scores = ranking.ranking_scores(
-            jnp.where(reporter_mask[:, None], state.rankings, -1),
-            m, fed.top_k)
-        ids, sel_mask = neighbor.select_partners(
-            state.codes, scores, fed,
-            rng=rng_sel if not (fed.use_lsh or fed.use_rank) else None)
-
-        # --- 4. P2P logit exchange on personal reference sets ------------
-        nb_params = jax.tree.map(lambda p: p[ids], state.params)  # (M,N,...)
-        y_web = jax.vmap(                                   # over clients i
-            jax.vmap(apply_fn, in_axes=(0, None))           # over neighbors j
-        )(nb_params, data["x_ref"])                         # (M,N,R,C)
-        own_ref = jax.vmap(apply_fn)(state.params, data["x_ref"])  # (M,R,C)
-
-        # --- 5. Eq. (3) losses + §3.5 LSH verification --------------------
-        l_ij = jax.vmap(lambda yl, y: jax.vmap(
-            lambda l: distill.cross_entropy(l, y))(yl))(
-            y_web, data["y_ref"])                           # (M,N)
-        if fed.lsh_verification:
-            valid = jax.vmap(verify.lsh_verification_mask)(
-                own_ref, y_web, sel_mask)
-        else:
-            valid = sel_mask
-
-        # --- 6. model update (Alg. 1 l.19) --------------------------------
-        target_ref, has_target = jax.vmap(
-            distill.aggregate_neighbor_outputs)(y_web, valid)
-        upd_keys = jax.vmap(
-            lambda i: jax.random.fold_in(rng_upd, i))(jnp.arange(m))
-        data_per = {k: data[k] for k in
-                    ("x_train", "y_train", "x_ref", "y_ref")}
-        params, opt_state, train_metrics = batched_local_update(
+        sel = select_phase(state, fed, rng=rng_sel)
+        exch = exchange_phase(apply_fn, fed, state.params, data, sel)
+        params, opt_state, train_metrics = update_phase(
             apply_fn, optimizer, fed, state.params, state.opt_state,
-            data_per, target_ref, has_target, upd_keys)
+            data, exch, rng_upd)
+        ann = announce_phase(fed, params, sel, exch, state.round)
 
-        # --- 7. announcements for the next round --------------------------
-        # Codes consumed in round r+1 hash with the shared per-round
-        # seed r+1: every client projects with the SAME Rademacher
-        # matrix (distances stay comparable) and the projection rotates
-        # each round, so a §3.4 attacker cannot precompute a code that
-        # stays close to a victim across rounds (regression-tested).
-        codes = lsh.stacked_lsh_codes(params, seed=state.round + 1,
-                                      bits=fed.lsh_bits,
-                                      backend=fed.selection_backend)
-        new_rankings = jax.vmap(ranking.make_ranking)(ids, l_ij, sel_mask)
-        commitments = fnv1a_commit(new_rankings, salt=0)
-
+        n_sel = jnp.sum(sel.sel_mask.astype(jnp.float32))
         metrics = {
             "round": state.round,
             "mean_loss": jnp.mean(train_metrics["loss"]),
             "mean_local_loss": jnp.mean(train_metrics["local_loss"]),
             "mean_ref_loss": jnp.mean(train_metrics["ref_loss"]),
-            "mean_neighbor_loss": jnp.mean(
-                jnp.where(sel_mask, l_ij, 0.0)),
-            "valid_neighbor_frac": jnp.mean(valid.astype(jnp.float32)),
+            # mean over the SELECTED slots only (padding slots would
+            # otherwise dilute the average with zeros)
+            "mean_neighbor_loss": (
+                jnp.sum(jnp.where(sel.sel_mask, exch.l_ij, 0.0))
+                / jnp.maximum(n_sel, 1.0)),
+            "valid_neighbor_frac": jnp.mean(
+                exch.valid_mask.astype(jnp.float32)),
             "honest_reporter_frac": jnp.mean(
-                reporter_mask.astype(jnp.float32)),
-            "neighbor_ids": ids,
-            "valid_mask": valid,
-            "ranking_scores": scores,
+                sel.reporter_mask.astype(jnp.float32)),
+            "neighbor_ids": sel.ids,
+            "valid_mask": exch.valid_mask,
+            "ranking_scores": sel.scores,
         }
-        new_state = FedState(params, opt_state, codes, new_rankings,
-                             commitments, rng, state.round + 1)
+        new_state = FedState(params, opt_state, ann.codes, ann.rankings,
+                             ann.commitments, rng, state.round + 1)
         return new_state, metrics
 
     return round_fn

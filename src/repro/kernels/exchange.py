@@ -1,0 +1,136 @@
+"""Pallas TPU kernel: fused all-in-one exchange (WPFed Eq. 3 + §3.5 +
+the distillation-target mean in a single pass).
+
+The unfused round ran three separate log-softmax passes over the same
+(M, N, R, C) neighbor-logit tensor — one inside `distill.cross_entropy`
+(Eq. 3), one inside `verify.kl_divergence` (§3.5), and then re-read the
+tensor a third time for `distill.aggregate_neighbor_outputs`. This
+kernel computes ONE shared neighbor log-softmax per client block and
+derives all three results from it while the (N, R, C) tile sits in
+VMEM (DESIGN.md §7):
+
+  * Eq. 3 CE losses l_ij via take_along_axis on the reference labels
+    (a one-hot compare+sum lowers more naturally on TPU but XLA's
+    fusion rewrites it away from the gathered value in the last ulp —
+    see the in-kernel comment; revisit if Mosaic rejects the gather on
+    compiled TPU);
+  * §3.5 output-KL divergences against the client's own reference
+    outputs, plus the upper-half keep filter. The rank is computed in
+    counting form — rank(n) = #{m : kl_m < kl_n} + #{m < n : kl_m ==
+    kl_n} — which equals the stable-argsort rank the unfused
+    `verify.lsh_verification_mask` derives from a double argsort
+    (jnp.argsort is stable; ties break ascending-index), at O(N^2)
+    compares instead of an in-kernel sort Mosaic would struggle with;
+  * the masked distillation-target mean over the neighbors that passed
+    (zeros fallback when none do — `has_target` is derived from the
+    returned mask by the wrapper, it is a free reduction).
+
+Bit-exactness (tests/test_exchange_pipeline.py): every derived value
+consumes the same floats in the same reduction order as the jnp oracle
+twin (`ref.all_in_one_exchange_ref`), so kernel and oracle agree
+bit-exactly in interpret mode; the oracle in turn is bit-identical to
+the unfused cross_entropy -> lsh_verification_mask ->
+aggregate_neighbor_outputs composition the round used to run.
+
+VMEM per program ~= BM_EXC * (N + 1) * R * C * 4 bytes for the logit
+tiles (at BM=4, N=16, R=64, C=1024 that is ~17 MB — reduce BM_EXC or
+tile R before running vocab-scale reference sets compiled).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BM_EXC = 4          # client block per program
+
+
+def _exchange_kernel(own_ref, nb_ref, y_ref, sel_ref,
+                     l_ref, valid_ref, target_ref, *,
+                     lsh_verification: bool):
+    nb = nb_ref[...].astype(jnp.float32)              # (BM, N, R, C)
+    bm, n, r, c = nb.shape
+    logp_nb = jax.nn.log_softmax(nb, axis=-1)         # ONE shared pass
+    selm = sel_ref[...] != 0                          # (BM, N)
+
+    # Eq. 3: CE of each neighbor's logits on the reference labels.
+    # take_along_axis, NOT a one-hot sum: XLA's fusion rewrites
+    # sum(where(onehot, logp, 0)) into a form that differs from the
+    # gathered value in the last ulp, which would break kernel/oracle
+    # bit-exactness (verified empirically; the two are identical
+    # un-jitted).
+    nll = -jnp.take_along_axis(logp_nb, y_ref[...][:, None, :, None],
+                               axis=-1)[..., 0]
+    l_ref[...] = jnp.mean(nll, axis=-1)               # (BM, N)
+
+    # §3.5: output-KL upper-half filter over the selected slots
+    if lsh_verification:
+        logp_own = jax.nn.log_softmax(
+            own_ref[...].astype(jnp.float32), axis=-1)  # (BM, R, C)
+        kl = jnp.sum(jnp.exp(logp_own)[:, None]
+                     * (logp_own[:, None] - logp_nb), axis=-1)
+        kls = jnp.where(selm, jnp.mean(kl, axis=-1), jnp.inf)
+        n_valid = jnp.sum(sel_ref[...], axis=-1, keepdims=True)
+        keep = (n_valid + 1) // 2
+        lt = kls[:, :, None] < kls[:, None, :]
+        eq = kls[:, :, None] == kls[:, None, :]
+        a_idx = jax.lax.broadcasted_iota(jnp.int32, (bm, n, n), 1)
+        b_idx = jax.lax.broadcasted_iota(jnp.int32, (bm, n, n), 2)
+        rank_of = jnp.sum((lt | (eq & (a_idx < b_idx))).astype(jnp.int32),
+                          axis=1)                     # stable-sort rank
+        valid = (rank_of < keep) & selm
+    else:
+        valid = selm
+    valid_ref[...] = valid.astype(jnp.int32)
+
+    # masked distillation-target mean (zeros fallback when none pass)
+    w = valid.astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(w, axis=-1), 1.0)
+    target_ref[...] = (jnp.einsum("bn,bnrc->brc", w, nb)
+                       / denom[:, None, None])
+
+
+@functools.partial(jax.jit, static_argnames=("lsh_verification",
+                                             "interpret"))
+def fused_exchange(own_logits, neighbor_logits, y_ref, sel_mask, *,
+                   lsh_verification: bool = True, interpret: bool = True):
+    """Fused Eq. 3 + §3.5 + target mean. own_logits: (M, R, C);
+    neighbor_logits: (M, N, R, C); y_ref: (M, R) int; sel_mask: (M, N)
+    bool -> (l_ij (M, N) f32, valid (M, N) bool, target_ref (M, R, C)
+    f32, has_target (M,) bool). Pads M to the client-block grid; padded
+    rows carry an all-False selection mask and are discarded."""
+    m, n, r, c = neighbor_logits.shape
+    pm = (-m) % BM_EXC
+    own_p = jnp.pad(own_logits.astype(jnp.float32),
+                    ((0, pm), (0, 0), (0, 0)))
+    nb_p = jnp.pad(neighbor_logits.astype(jnp.float32),
+                   ((0, pm), (0, 0), (0, 0), (0, 0)))
+    y_p = jnp.pad(y_ref.astype(jnp.int32), ((0, pm), (0, 0)))
+    sel_p = jnp.pad(sel_mask.astype(jnp.int32), ((0, pm), (0, 0)))
+    mp = m + pm
+    l_ij, valid, target = pl.pallas_call(
+        functools.partial(_exchange_kernel,
+                          lsh_verification=lsh_verification),
+        grid=(mp // BM_EXC,),
+        in_specs=[
+            pl.BlockSpec((BM_EXC, r, c), lambda i: (i, 0, 0)),
+            pl.BlockSpec((BM_EXC, n, r, c), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((BM_EXC, r), lambda i: (i, 0)),
+            pl.BlockSpec((BM_EXC, n), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BM_EXC, n), lambda i: (i, 0)),
+            pl.BlockSpec((BM_EXC, n), lambda i: (i, 0)),
+            pl.BlockSpec((BM_EXC, r, c), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((mp, n), jnp.float32),
+            jax.ShapeDtypeStruct((mp, n), jnp.int32),
+            jax.ShapeDtypeStruct((mp, r, c), jnp.float32),
+        ],
+        interpret=interpret,
+    )(own_p, nb_p, y_p, sel_p)
+    valid = valid[:m].astype(bool)
+    return l_ij[:m], valid, target[:m], jnp.any(valid, axis=-1)

@@ -21,18 +21,16 @@ from repro.kernels.lsh_projection import (BLOCK_M, CHUNK,
 
 
 def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+    from repro.core.backends import interpret  # see resolve_backend
+    return interpret()
 
 
 def resolve_backend(backend: str) -> str:
-    """"auto" -> compiled kernels on TPU, jnp oracles elsewhere (the
-    interpret-mode Pallas path is for correctness tests, not CPU speed).
-    "kernel"/"oracle" force the choice (kernel interprets off-TPU)."""
-    if backend == "auto":
-        return "kernel" if jax.default_backend() == "tpu" else "oracle"
-    if backend not in ("kernel", "oracle"):
-        raise ValueError(f"unknown selection backend: {backend!r}")
-    return backend
+    """Delegates to the single validated resolver in
+    repro.core.backends (function-level import: repro.core's package
+    __init__ pulls in the whole protocol, which imports this module)."""
+    from repro.core.backends import resolve
+    return resolve(backend)
 
 
 def flatten_params(params) -> jnp.ndarray:

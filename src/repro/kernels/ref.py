@@ -61,6 +61,56 @@ def fused_select_ref(codes, scores, *, bits: int, gamma: float,
     return top_i.astype(jnp.int32), top_w
 
 
+def all_in_one_exchange_ref(own_logits, neighbor_logits, y_ref, sel_mask,
+                            *, lsh_verification: bool = True):
+    """Oracle for the fused exchange kernel (WPFed Eq. 3 + §3.5 + the
+    distillation-target mean in one shared log-softmax pass).
+
+    own_logits: (M, R, C) f32 — each client's outputs on its reference
+    set; neighbor_logits: (M, N, R, C) f32 — selected neighbors' outputs
+    on the same set; y_ref: (M, R) int32 labels; sel_mask: (M, N) bool.
+
+    Returns (l_ij (M, N) f32, valid (M, N) bool, target_ref (M, R, C)
+    f32, has_target (M,) bool). Semantics are bit-identical to the
+    unfused composition the round used to run (`distill.cross_entropy`
+    -> `verify.lsh_verification_mask` -> `distill
+    .aggregate_neighbor_outputs`): the neighbor log-softmax that the CE
+    and KL terms both consume is a deterministic elementwise-row op, so
+    computing it once is exact, and the §3.5 rank is the stable-argsort
+    rank in counting form (ties break ascending-index, matching
+    jnp.argsort). Tested in tests/test_exchange_pipeline.py.
+    """
+    own = own_logits.astype(jnp.float32)
+    nb = neighbor_logits.astype(jnp.float32)
+    logp_nb = jax.nn.log_softmax(nb, axis=-1)           # ONE shared pass
+    # Eq. 3: per-neighbor CE on the reference labels
+    nll = -jnp.take_along_axis(
+        logp_nb, y_ref[:, None, :, None].astype(jnp.int32), axis=-1)[..., 0]
+    l_ij = jnp.mean(nll, axis=-1)                       # (M, N)
+    # §3.5: output-KL similarity, upper-half filter over selected slots
+    if lsh_verification:
+        logp_own = jax.nn.log_softmax(own, axis=-1)     # (M, R, C)
+        kl = jnp.sum(jnp.exp(logp_own)[:, None]
+                     * (logp_own[:, None] - logp_nb), axis=-1)
+        kls = jnp.where(sel_mask, jnp.mean(kl, axis=-1), jnp.inf)
+        n_valid = jnp.sum(sel_mask.astype(jnp.int32), axis=-1, keepdims=True)
+        keep = (n_valid + 1) // 2
+        lt = kls[:, :, None] < kls[:, None, :]          # rank candidates n
+        eq = kls[:, :, None] == kls[:, None, :]
+        n_idx = jnp.arange(kls.shape[1])
+        first = n_idx[:, None] < n_idx[None, :]         # m before n
+        rank_of = jnp.sum(lt | (eq & first), axis=1)    # stable-sort rank
+        valid = (rank_of < keep) & sel_mask
+    else:
+        valid = sel_mask
+    # masked distillation-target mean (zeros fallback when none pass)
+    w = valid.astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(w, axis=-1), 1.0)
+    target = jnp.einsum("mn,mnrc->mrc", w, nb) / denom[:, None, None]
+    has_target = jnp.sum(w, axis=-1) > 0
+    return l_ij, valid, target, has_target
+
+
 def hamming_all_pairs_ref(codes_a, codes_b):
     """Oracle for hamming: broadcast XOR + SWAR popcount."""
     x = codes_a[:, None, :] ^ codes_b[None, :, :]

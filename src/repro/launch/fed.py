@@ -27,14 +27,24 @@ MODEL_FOR = {"mnist": mnist_cnn, "aecg": aecg_tcn, "seeg": seeg_tcn}
 
 def run_federation(dataset: str = "mnist", rounds: int = 10,
                    num_clients: int = 0, seed: int = 0, fed: FedConfig = None,
-                   backend: str = "auto", log=print):
+                   backend: str = "auto", ref_mode: str = "personal",
+                   log=print):
+    """`backend` drives BOTH kernel-backed subsystems (selection and
+    exchange — one flag, resolved by repro.core.backends.resolve).
+    An explicit `fed` config wins outright: backend/ref_mode apply only
+    to the default-constructed config (asserted, not silently dropped).
+    """
+    if fed is not None and (backend != "auto" or ref_mode != "personal"):
+        raise ValueError("pass backend/ref_mode inside the explicit "
+                         "FedConfig, not alongside it")
     ds_fn = DATASETS[dataset]
     ds = ds_fn(seed=seed) if num_clients == 0 else \
         ds_fn(num_clients=num_clients, seed=seed)
     n_opt, alpha, gamma = PAPER_FED_OPTIMA[dataset]
     fed = fed or FedConfig(num_clients=ds.num_clients, num_neighbors=n_opt,
                            alpha=alpha, gamma=gamma, rounds=rounds,
-                           selection_backend=backend)
+                           selection_backend=backend,
+                           exchange_backend=backend, ref_mode=ref_mode)
     mcfg = MODEL_FOR[dataset]()
     apply_fn = functools.partial(apply_client_model, mcfg)
     init_fn = lambda k: init_client_model(mcfg, k)
@@ -56,12 +66,14 @@ def run_federation(dataset: str = "mnist", rounds: int = 10,
 
 
 def dryrun_fed_round(num_clients: int = 256, arch: str = "phi3-medium-14b",
-                     backend: str = "kernel"):
-    """Beyond-paper: lower one WPFed round with 256 REDUCED-transformer
+                     backend: str = "kernel", ref_mode: str = "personal"):
+    """Beyond-paper: lower one WPFed round with REDUCED-transformer
     clients sharded over the production mesh's data axis — proves the
     protocol itself scales out (the paper simulated <=40 clients on GPU).
-    Defaults to the kernel selection backend so the lowering exercises
-    the batched LSH + fused selection kernels under sharding.
+    Defaults to the kernel backends so the lowering exercises the
+    batched LSH + fused selection + fused exchange kernels under
+    sharding; ref_mode="public" lowers the M-forward shared-reference
+    exchange instead of the M*N personal one (DESIGN.md §7).
 
     Must be called in a fresh process with XLA_FLAGS set (see dryrun.py).
     """
@@ -74,7 +86,8 @@ def dryrun_fed_round(num_clients: int = 256, arch: str = "phi3-medium-14b",
     cfg = get_config(arch).reduced()
     fed = FedConfig(num_clients=num_clients, num_neighbors=8, top_k=4,
                     local_steps=1, lsh_bits=128, ref_batch=8,
-                    selection_backend=backend)
+                    selection_backend=backend, exchange_backend=backend,
+                    ref_mode=ref_mode)
     mesh = make_production_mesh()
 
     def apply_fn(params, tokens):
@@ -119,6 +132,7 @@ def dryrun_fed_round(num_clients: int = 256, arch: str = "phi3-medium-14b",
     print(json.dumps({
         "fed_round_clients": m,
         "client_arch": cfg.name,
+        "ref_mode": ref_mode,
         "mesh": "16x16",
         "flops_per_device": float(cost.get("flops", 0)),
         "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
@@ -137,19 +151,28 @@ def main(argv=None):
                     help="lower a 256-client WPFed round on the 16x16 mesh")
     ap.add_argument("--backend", default="auto",
                     choices=["auto", "kernel", "oracle"],
-                    help="peer-selection backend (DESIGN.md §4)")
+                    help="kernel-backed subsystem backend — drives both "
+                         "selection AND exchange (DESIGN.md §4, §7)")
+    ap.add_argument("--ref-mode", default="personal",
+                    choices=["personal", "public"],
+                    help="personal: each client's own reference set "
+                         "(M*N forwards); public: one shared reference "
+                         "set, exchange is a gather (DESIGN.md §7)")
     args = ap.parse_args(argv)
     if args.dryrun:
         import os
         assert "xla_force_host_platform_device_count" in \
             os.environ.get("XLA_FLAGS", ""), \
             "run with XLA_FLAGS=--xla_force_host_platform_device_count=512"
-        dryrun_fed_round(backend="kernel" if args.backend == "auto"
-                         else args.backend)
+        dryrun_fed_round(num_clients=args.clients or 256,
+                         backend="kernel" if args.backend == "auto"
+                         else args.backend,
+                         ref_mode=args.ref_mode)
         return
     _, history = run_federation(args.dataset, args.rounds,
                                 num_clients=args.clients, seed=args.seed,
-                                backend=args.backend)
+                                backend=args.backend,
+                                ref_mode=args.ref_mode)
     print(json.dumps(history[-3:], indent=1))
 
 

@@ -139,6 +139,24 @@ def test_blockchain_round_trip(fed_run):
     assert not bc.verify_chain()
 
 
+def test_blockchain_stamps_real_timestamps(fed_run):
+    """Regression: Block.timestamp was always 0.0 (lambda default).
+    publish_round must stamp wall-clock time, the stamp must be
+    hash-covered (tamper-evident), and genesis stays unstamped."""
+    import time
+    state = fed_run["state"]
+    bc = Blockchain()
+    t0 = time.time()
+    blk = bc.publish_round(1, {0: {"lsh": lsh_code_hex(state.codes[0]),
+                                   "commit": "00" * 32}})
+    t1 = time.time()
+    assert bc.blocks[0].timestamp == 0.0          # genesis
+    assert t0 <= blk.timestamp <= t1
+    assert bc.verify_chain()
+    blk.timestamp += 60.0                         # backdate -> detected
+    assert not bc.verify_chain()
+
+
 def test_ablation_switches_alter_selection(tiny_fed):
     import dataclasses
     f = tiny_fed
