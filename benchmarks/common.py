@@ -20,9 +20,8 @@ import numpy as np
 
 from repro.configs.paper_models import (FedConfig, PAPER_FED_OPTIMA,
                                         aecg_tcn, mnist_cnn, seeg_tcn)
-from repro.core import attacks, evaluate, init_state, make_wpfed_round
-from repro.core.baselines import (make_fedmd_round, make_kdpdfl_round,
-                                  make_proxyfl_round, make_silo_round)
+from repro.core import (Schedule, evaluate, init_state, make_program,
+                        program_round, run_rounds)
 from repro.data import DATASETS
 from repro.models import apply_client_model, init_client_model
 from repro.optim import adam
@@ -65,41 +64,60 @@ def setup(dataset: str, seed: int, num_clients: int = 0,
             "opt": opt, "data": data}
 
 
-def make_round(method: str, ctx) -> Callable:
-    f = ctx
-    if method == "wpfed":
-        return make_wpfed_round(f["apply_fn"], f["opt"], f["fed"])
-    if method == "silo":
-        return make_silo_round(f["apply_fn"], f["opt"], f["fed"])
+def make_fed_program(method: str, ctx):
+    """RoundProgram for `method`, resolved in one place
+    (core.rounds.make_program) with ctx-specific extras bound."""
+    kw = {}
     if method == "fedmd":
-        return make_fedmd_round(f["apply_fn"], f["opt"], f["fed"],
-                                jnp.asarray(f["ds"].shared_ref_x))
-    if method == "proxyfl":
-        return make_proxyfl_round(f["apply_fn"], f["opt"], f["fed"])
-    if method == "kdpdfl":
-        return make_kdpdfl_round(f["apply_fn"], f["opt"], f["fed"])
-    raise KeyError(method)
+        kw["shared_ref_x"] = jnp.asarray(ctx["ds"].shared_ref_x)
+    return make_program(method, ctx["apply_fn"], ctx["opt"], ctx["fed"],
+                        **kw)
+
+
+def make_round(method: str, ctx) -> Callable:
+    """Classic round_fn(state, data) -> (state, metrics) for `method` —
+    the program_round adapter over the same one-place registry."""
+    return program_round(make_fed_program(method, ctx))
 
 
 def run_method(method: str, dataset: str, seed: int, rounds: int = 0,
                fed_overrides: Optional[dict] = None,
                attack_hook: Optional[Callable] = None,
-               honest_mask=None) -> Dict:
-    """Train `method` for `rounds`; returns accuracy trajectory."""
+               honest_mask=None, reselect_every: int = 1) -> Dict:
+    """Train `method` for `rounds`; returns accuracy trajectory.
+
+    Without an attack hook the rounds run through the round-program
+    engine (core.rounds.run_rounds — per-round evaluation stays inside
+    the compiled segment; reselect_every>1 runs gossip epochs between
+    reselections, DESIGN.md §8). Attack hooks mutate state on the host
+    every round, so that path keeps the per-round Python loop and
+    rejects reselect_every>1 rather than silently running sync.
+    """
+    if attack_hook is not None and reselect_every != 1:
+        raise ValueError("attack_hook runs the per-round host loop; "
+                         "reselect_every>1 is not supported there")
     ctx = setup(dataset, seed, fed_overrides=fed_overrides)
     rounds = rounds or BENCH_ROUNDS
     state = init_state(ctx["apply_fn"], ctx["init_fn"], ctx["opt"],
                        ctx["fed"], jax.random.PRNGKey(seed))
-    round_fn = jax.jit(make_round(method, ctx))
-    accs = []
     t0 = time.time()
-    for r in range(rounds):
-        if attack_hook is not None:
+    if attack_hook is None:
+        eval_fn = lambda st, d: {"acc": evaluate(
+            ctx["apply_fn"], st, d, honest_mask=honest_mask)["mean_acc"]}
+        state, history = run_rounds(
+            make_fed_program(method, ctx), state, ctx["data"],
+            rounds=rounds, schedule=Schedule(reselect_every),
+            eval_fn=eval_fn)
+        accs = [h["acc"] for h in history]
+    else:
+        round_fn = jax.jit(make_round(method, ctx))
+        accs = []
+        for r in range(rounds):
             state = attack_hook(state, r, ctx)
-        state, _ = round_fn(state, ctx["data"])
-        ev = evaluate(ctx["apply_fn"], state, ctx["data"],
-                      honest_mask=honest_mask)
-        accs.append(float(ev["mean_acc"]))
+            state, _ = round_fn(state, ctx["data"])
+            ev = evaluate(ctx["apply_fn"], state, ctx["data"],
+                          honest_mask=honest_mask)
+            accs.append(float(ev["mean_acc"]))
     return {"method": method, "dataset": dataset, "seed": seed,
             "accs": accs, "final_acc": accs[-1],
             "wall_s": time.time() - t0}

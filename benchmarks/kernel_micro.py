@@ -15,6 +15,13 @@ over the same (M, N, R, C) logit tensor the fused form collapses into
 one. `python benchmarks/kernel_micro.py` writes the machine-readable
 baselines to benchmarks/BENCH_selection.json and
 benchmarks/BENCH_exchange.json.
+
+The rounds row benches the round-program engine (DESIGN.md §8): the
+per-round Python loop vs scan-driven reselection segments at
+reselect_every in {1, 4} on a tiny MLP federation — the schedule win
+is (a) G-1 of every G rounds skipping re-code/re-selection/announce
+and (b) one host dispatch per period instead of per round. Always
+writes benchmarks/BENCH_rounds.json (smoke included — CI tracks it).
 """
 from __future__ import annotations
 
@@ -37,6 +44,8 @@ BENCH_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                           "BENCH_selection.json")
 BENCH_EXCHANGE_JSON = os.path.join(
     os.path.dirname(os.path.abspath(__file__)), "BENCH_exchange.json")
+BENCH_ROUNDS_JSON = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "BENCH_rounds.json")
 
 
 def _time(fn, *args, iters=3):
@@ -157,6 +166,69 @@ def bench_fused_exchange(m=128, n=8, r=32, c=10, iters=10):
             "tpu_est_us": round(tpu_est_us, 3)}
 
 
+def bench_rounds(m=8, rounds=4, iters=3):
+    """Round-program engine vs the per-round Python loop on a tiny MLP
+    federation (16-dim, 3 classes): wall time per round for (a) the
+    classic jit(round_fn) Python loop, (b) engine segments at G=1
+    (sync — one segment per round), (c) G=4 (one global round + 3
+    gossip epochs in one compiled scan segment)."""
+    import functools
+    from repro.configs.paper_models import ClientModelConfig, FedConfig
+    from repro.core import init_state, make_segment_fn, wpfed_program
+    from repro.core.rounds import program_round
+    from repro.models import apply_client_model, init_client_model
+    from repro.optim import adam
+
+    mcfg = ClientModelConfig("bench-mlp", "mlp", (16,), 3, hidden=(32,))
+    fed = FedConfig(num_clients=m, num_neighbors=3, top_k=2, local_steps=2,
+                    local_batch=16, lsh_bits=128, lr=1e-2)
+    key = jax.random.PRNGKey(0)
+    data = {
+        "x_train": jax.random.normal(key, (m, 32, 16)),
+        "y_train": jax.random.randint(jax.random.fold_in(key, 1),
+                                      (m, 32), 0, 3),
+        "x_ref": jax.random.normal(jax.random.fold_in(key, 2), (m, 8, 16)),
+        "y_ref": jax.random.randint(jax.random.fold_in(key, 3),
+                                    (m, 8), 0, 3),
+    }
+    apply_fn = functools.partial(apply_client_model, mcfg)
+    opt = adam(fed.lr)
+    state = init_state(apply_fn, lambda k: init_client_model(mcfg, k), opt,
+                       fed, key)
+    program = wpfed_program(apply_fn, opt, fed)
+
+    loop_fn = jax.jit(program_round(program))
+    seg1 = jax.jit(make_segment_fn(program, 1))
+    seg4 = jax.jit(make_segment_fn(program, 4))
+
+    def run_loop(st):
+        for _ in range(rounds):
+            st, _m = loop_fn(st, data)
+        return st
+
+    def run_g1(st):
+        for _ in range(rounds):
+            st, _m = seg1(st, data)
+        return st
+
+    g4_rounds = (rounds // 4) * 4
+    assert g4_rounds > 0, "bench_rounds needs rounds >= 4"
+
+    def run_g4(st):
+        for _ in range(rounds // 4):
+            st, _m = seg4(st, data)
+        return st
+
+    loop_us = _time(run_loop, state, iters=iters) / rounds
+    g1_us = _time(run_g1, state, iters=iters) / rounds
+    g4_us = _time(run_g4, state, iters=iters) / g4_rounds
+    return {"m": m, "rounds": rounds,
+            "loop_us_per_round": round(loop_us, 1),
+            "g1_us_per_round": round(g1_us, 1),
+            "g4_us_per_round": round(g4_us, 1),
+            "g4_speedup_vs_loop": round(loop_us / g4_us, 2)}
+
+
 def main(argv=None, log=print):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -165,6 +237,9 @@ def main(argv=None, log=print):
                     help="selection-baseline path ('' disables)")
     ap.add_argument("--exchange-json-out", default=BENCH_EXCHANGE_JSON,
                     help="exchange-baseline path ('' disables)")
+    ap.add_argument("--rounds-json-out", default=BENCH_ROUNDS_JSON,
+                    help="rounds-baseline path ('' disables); written in "
+                         "smoke mode too — CI tracks the engine")
     args = ap.parse_args(argv)
     iters = 1 if args.smoke else 3
 
@@ -200,6 +275,31 @@ def main(argv=None, log=print):
         rows.append((f"exchange_fused_{tag}", r["fused_us"],
                      r["tpu_est_us"]))
         log(f"# fused exchange speedup @ {tag}: {r['speedup']}x")
+
+    rounds_row = bench_rounds(m=4 if args.smoke else 8,
+                              rounds=4 if args.smoke else 8, iters=iters)
+    for k in ("loop", "g1", "g4"):
+        rows.append((f"rounds_{k}_m{rounds_row['m']}",
+                     rounds_row[f"{k}_us_per_round"], 0.0))
+    log(f"# rounds engine G=4 speedup vs loop: "
+        f"{rounds_row['g4_speedup_vs_loop']}x")
+    if args.rounds_json_out:
+        with open(args.rounds_json_out, "w") as f:
+            json.dump(
+                {"rounds": rounds_row, "smoke": bool(args.smoke),
+                 "note": "CPU wall us per federation round: per-round "
+                         "jit Python loop vs engine segments at "
+                         "reselect_every 1 and 4. Scheduler noise at "
+                         "the ms scale is large on this container "
+                         "(ratios move ~30%+ run to run; loop-vs-g1 "
+                         "differences are pure noise). The durable "
+                         "claim is structural: at G=4, 3 of 4 rounds "
+                         "skip LSH re-code/top-N re-selection/announce "
+                         "and run inside one lax.scan segment with one "
+                         "host dispatch per period (DESIGN.md §8)"},
+                f, indent=1)
+        log(f"# wrote {args.rounds_json_out}")
+
     for name, us, est in rows:
         log(f"{name},{us:.1f},{est:.3f}")
 

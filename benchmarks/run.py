@@ -39,10 +39,13 @@ def main() -> None:
         # explicit argv: kernel_micro must not re-parse run.py's flags,
         # and its selection baseline goes to RESULTS_DIR — only a direct
         # kernel_micro invocation rewrites the committed baseline.
+        rounds_out = ["--rounds-json-out",
+                      os.path.join(RESULTS_DIR, "BENCH_rounds.json")]
         outputs["kernels"] = kernel_micro.main(
-            ["--smoke"] if args.fast else
-            ["--json-out", os.path.join(RESULTS_DIR,
-                                        "BENCH_selection.json")])
+            (["--smoke"] if args.fast else
+             ["--json-out", os.path.join(RESULTS_DIR,
+                                         "BENCH_selection.json")])
+            + rounds_out)
 
     if want("roofline"):
         print("\n# roofline (from dry-run sweeps)")

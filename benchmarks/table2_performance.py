@@ -1,8 +1,15 @@
 """Paper Table 2: WPFed vs SILO / FedMD / ProxyFL / KD-PDFL on the three
 (synthetic stand-in) datasets. Target: the paper's ordering — WPFed best,
-SILO worst under non-IID."""
+SILO worst under non-IID.
+
+All five methods run through the one round-program engine entry point
+(core.rounds.run_rounds via benchmarks.common.run_method); pass
+--reselect-every G to score the gossip schedule (DESIGN.md §8) instead
+of the per-round sync protocol.
+"""
 from __future__ import annotations
 
+import argparse
 import json
 
 from benchmarks.common import BENCH_SEEDS, mean_std, run_method
@@ -11,12 +18,13 @@ METHODS = ("silo", "fedmd", "proxyfl", "kdpdfl", "wpfed")
 
 
 def run(datasets=("mnist", "aecg", "seeg"), seeds=BENCH_SEEDS, rounds=0,
-        log=print):
+        reselect_every=1, log=print):
     table = {}
     for ds in datasets:
         table[ds] = {}
         for method in METHODS:
-            results = [run_method(method, ds, seed, rounds=rounds)
+            results = [run_method(method, ds, seed, rounds=rounds,
+                                  reselect_every=reselect_every)
                        for seed in seeds]
             table[ds][method] = mean_std(results)
             log(f"table2 {ds:6s} {method:8s} "
@@ -25,8 +33,14 @@ def run(datasets=("mnist", "aecg", "seeg"), seeds=BENCH_SEEDS, rounds=0,
     return table
 
 
-def main():
-    table = run()
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=0,
+                    help="0 = benchmark default")
+    ap.add_argument("--reselect-every", type=int, default=1,
+                    help="gossip period G (1 = sync, the paper)")
+    args = ap.parse_args(argv)
+    table = run(rounds=args.rounds, reselect_every=args.reselect_every)
     print(json.dumps(table, indent=1))
     # paper's key ordering claims
     for ds, row in table.items():

@@ -3,20 +3,21 @@
 trained for a few hundred aggregate local steps on synthetic non-IID
 MNIST, with the blockchain ledger recording every round's announcements.
 
-    PYTHONPATH=src python examples/wpfed_federation.py [--rounds 12]
+    PYTHONPATH=src python examples/wpfed_federation.py [--rounds 12] \
+        [--schedule gossip --reselect-every 4]
 """
 import argparse
 import functools
-import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.paper_models import FedConfig, mnist_cnn
-from repro.core import evaluate, init_state, make_wpfed_round
-from repro.core.chain import Blockchain, lsh_code_hex, sha256_commit
+from repro.core import (evaluate, init_state, resolve_schedule, run_rounds,
+                        wpfed_program)
+from repro.core.chain import Blockchain
 from repro.data import make_mnist_federated
+from repro.launch.fed import chain_publisher
 from repro.models import apply_client_model, init_client_model
 from repro.optim import adam
 
@@ -33,7 +34,14 @@ def main():
                     choices=["personal", "public"],
                     help="public: shared reference set, M forwards per "
                          "exchange instead of M*N (DESIGN.md §7)")
+    ap.add_argument("--schedule", default="sync",
+                    choices=["sync", "gossip"],
+                    help="gossip: re-select every --reselect-every rounds, "
+                         "cheap peer epochs in between (DESIGN.md §8)")
+    ap.add_argument("--reselect-every", type=int, default=0,
+                    help="gossip period G (0 = schedule default)")
     args = ap.parse_args()
+    sched = resolve_schedule(args.schedule, args.reselect_every)
 
     fed = FedConfig(num_clients=args.clients, num_neighbors=6, top_k=4,
                     local_steps=args.local_steps, lsh_bits=256,
@@ -52,25 +60,22 @@ def main():
           f"{n_params // args.clients:,} params = {n_params:,} total; "
           f"{args.rounds} rounds x {fed.local_steps} local steps")
 
+    # the engine drives whole reselection periods (gossip epochs under
+    # lax.scan) and publishes each reselection's announcements +
+    # reveals on the host ledger (DESIGN.md §8)
     chain = Blockchain()
-    round_fn = jax.jit(make_wpfed_round(apply_fn, opt, fed))
-    for r in range(args.rounds):
-        t0 = time.time()
-        state, metrics = round_fn(state, data)
-        # publish this round's announcements on the ledger
-        ann = {i: {"lsh": lsh_code_hex(np.asarray(state.codes[i])),
-                   "commit": sha256_commit(np.asarray(state.rankings[i]))}
-               for i in range(args.clients)}
-        reveals = {i: [int(x) for x in np.asarray(state.rankings[i])]
-                   for i in range(args.clients)}
-        chain.publish_round(r + 1, ann, reveals=reveals)
-        ev = evaluate(apply_fn, state, data)
-        print(f"round {r:3d}: acc {float(ev['mean_acc']):.4f} "
-              f"loss {float(metrics['mean_loss']):.4f} "
-              f"verified {float(metrics['valid_neighbor_frac']):.2f} "
-              f"({time.time() - t0:.1f}s)", flush=True)
+    state, history = run_rounds(
+        wpfed_program(apply_fn, opt, fed), state, data,
+        rounds=args.rounds, schedule=sched,
+        eval_fn=lambda st, d: {"acc": evaluate(apply_fn, st, d)["mean_acc"]},
+        on_reselect=chain_publisher(chain, args.clients),
+        log=lambda line: print(line, flush=True))
+    last = history[-1]
+    print(f"final: acc {last['acc']:.4f} "
+          f"verified {last['valid_neighbor_frac']:.2f}")
     assert chain.verify_chain(), "ledger integrity violated"
-    print(f"ledger: {len(chain.blocks)} blocks, chain verified OK")
+    print(f"ledger: {len(chain.blocks)} blocks "
+          f"({sched.reselect_every}-round periods), chain verified OK")
 
 
 if __name__ == "__main__":

@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
 # One-command verify recipe: tier-1 tests + kernel micro-benchmark
-# (smoke mode — covers LSH projection, Hamming, fused selection AND the
-# fused all-in-one exchange). Usage: scripts/ci.sh [extra pytest args]
+# (smoke mode — covers LSH projection, Hamming, fused selection, the
+# fused all-in-one exchange AND the round-program engine, which emits
+# benchmarks/BENCH_rounds.json). Usage: scripts/ci.sh [extra pytest args]
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"

@@ -6,6 +6,15 @@ from repro.core.exchange import (  # noqa: F401
     ExchangeResult,
     all_in_one_exchange,
 )
+from repro.core.rounds import (  # noqa: F401
+    RoundProgram,
+    Schedule,
+    make_program,
+    make_segment_fn,
+    program_round,
+    resolve_schedule,
+    run_rounds,
+)
 from repro.core.protocol import (  # noqa: F401
     Announcement,
     FedState,
@@ -17,4 +26,5 @@ from repro.core.protocol import (  # noqa: F401
     make_wpfed_round,
     select_phase,
     update_phase,
+    wpfed_program,
 )

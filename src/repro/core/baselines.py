@@ -11,108 +11,132 @@ ProxyFL (Kalra et al. 23): uniform random gossip — each round every
 KD-PDFL (Jeong & K. 23):   similarity-only selection — neighbors chosen
                            by output-KL similarity via knowledge
                            distillation, no rank score, no verification.
+
+Each baseline is expressed as a `core.rounds.RoundProgram` (DESIGN.md
+§8): the global round is the method's classic per-round body, and the
+gossip epoch reuses the method's selection cache where one exists —
+ProxyFL keeps its random peer draw, KD-PDFL its KL-similar neighbor
+ids (turning its O(M^2) all-pairs forwards into O(M*N) per epoch).
+SILO and FedMD have nothing to re-select (purely local / all-client
+consensus), so their gossip epoch IS the global body. The classic
+`make_*_round` constructors are adapters over the programs.
 """
 from __future__ import annotations
 
-import functools
-from typing import Callable, Dict, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.paper_models import FedConfig
-from repro.core import distill, verify
+from repro.core import verify
 from repro.core.protocol import FedState, batched_local_update
+from repro.core.rounds import RoundProgram, program_round
 from repro.optim.optimizers import Optimizer
 
 
-def _no_target(data):
-    ref_shape = data["x_ref"].shape            # (M, R, ...)
-    return None
+def _update_round(apply_fn, optimizer, fed: FedConfig, state: FedState,
+                  data_per, target, has_target, rng, rng_upd
+                  ) -> Tuple[FedState, Dict]:
+    """Shared tail of every baseline round: per-client fold_in keys,
+    batched local updates on (target, has_target), state advance."""
+    m = fed.num_clients
+    upd_keys = jax.vmap(
+        lambda i: jax.random.fold_in(rng_upd, i))(jnp.arange(m))
+    params, opt_state, tm = batched_local_update(
+        apply_fn, optimizer, fed, state.params, state.opt_state,
+        data_per, target, has_target, upd_keys)
+    metrics = {"mean_loss": jnp.mean(tm["loss"])}
+    return state._replace(params=params, opt_state=opt_state, rng=rng,
+                          round=state.round + 1), metrics
 
 
-def make_silo_round(apply_fn, optimizer, fed: FedConfig):
+def _own_data_per(data):
+    return {k: data[k] for k in ("x_train", "y_train", "x_ref", "y_ref")}
+
+
+def silo_program(apply_fn, optimizer, fed: FedConfig) -> RoundProgram:
     m = fed.num_clients
 
-    def round_fn(state: FedState, data):
+    def round_body(state: FedState, data):
         rng, rng_upd = jax.random.split(state.rng)
-        upd_keys = jax.vmap(
-            lambda i: jax.random.fold_in(rng_upd, i))(jnp.arange(m))
         # zero distillation target, has_target=False -> pure local CE
         dummy = jnp.zeros_like(
             jax.vmap(apply_fn)(state.params, data["x_ref"]))
-        data_per = {k: data[k] for k in
-                    ("x_train", "y_train", "x_ref", "y_ref")}
-        params, opt_state, tm = batched_local_update(
-            apply_fn, optimizer, fed, state.params, state.opt_state, data_per, dummy,
-          jnp.zeros((m,), bool), upd_keys)
-        metrics = {"mean_loss": jnp.mean(tm["loss"])}
-        return state._replace(params=params, opt_state=opt_state, rng=rng,
-                              round=state.round + 1), metrics
+        state, metrics = _update_round(
+            apply_fn, optimizer, fed, state, _own_data_per(data),
+            dummy, jnp.zeros((m,), bool), rng, rng_upd)
+        return state, (), metrics
 
-    return round_fn
+    # purely local: nothing to re-select, every epoch is the full body
+    return RoundProgram("silo", round_body,
+                        lambda state, data, cache: round_body(state, data))
 
 
-def make_fedmd_round(apply_fn, optimizer, fed: FedConfig, shared_ref_x):
+def fedmd_program(apply_fn, optimizer, fed: FedConfig,
+                  shared_ref_x) -> RoundProgram:
     """Consensus distillation on one shared reference set."""
     m = fed.num_clients
 
-    def round_fn(state: FedState, data):
+    def round_body(state: FedState, data):
         rng, rng_upd = jax.random.split(state.rng)
         logits = jax.vmap(apply_fn, in_axes=(0, None))(
             state.params, shared_ref_x)                    # (M,R,C)
         consensus = jnp.mean(logits, axis=0)               # (R,C)
-        upd_keys = jax.vmap(
-            lambda i: jax.random.fold_in(rng_upd, i))(jnp.arange(m))
         data_per = {k: data[k] for k in ("x_train", "y_train")}
         data_per["x_ref"] = jnp.broadcast_to(
             shared_ref_x[None], (m,) + shared_ref_x.shape)
         data_per["y_ref"] = jnp.zeros((m, shared_ref_x.shape[0]), jnp.int32)
-        params, opt_state, tm = batched_local_update(
-            apply_fn, optimizer, fed, state.params, state.opt_state, data_per,
-          jnp.broadcast_to(consensus[None], logits.shape),
-          jnp.ones((m,), bool), upd_keys)
-        metrics = {"mean_loss": jnp.mean(tm["loss"])}
-        return state._replace(params=params, opt_state=opt_state, rng=rng,
-                              round=state.round + 1), metrics
+        state, metrics = _update_round(
+            apply_fn, optimizer, fed, state, data_per,
+            jnp.broadcast_to(consensus[None], logits.shape),
+            jnp.ones((m,), bool), rng, rng_upd)
+        return state, (), metrics
 
-    return round_fn
+    # the consensus must track the drifting params, so every epoch
+    # recomputes it: no reusable selection cache
+    return RoundProgram("fedmd", round_body,
+                        lambda state, data, cache: round_body(state, data))
 
 
-def make_proxyfl_round(apply_fn, optimizer, fed: FedConfig,
-                       num_peers: int = 3):
-    """Uniform random gossip distillation."""
+def proxyfl_program(apply_fn, optimizer, fed: FedConfig,
+                    num_peers: int = 3) -> RoundProgram:
+    """Uniform random gossip distillation; the cache is the peer draw."""
     m = fed.num_clients
 
-    def round_fn(state: FedState, data):
-        rng, rng_pick, rng_upd = jax.random.split(state.rng, 3)
-        ids = jax.vmap(
-            lambda k: jax.random.choice(k, m, (num_peers,), replace=False)
-        )(jnp.stack(list(jax.random.split(rng_pick, m))))   # (M,P)
+    def _distill_from(state: FedState, data, ids, rng, rng_upd):
         nb_params = jax.tree.map(lambda p: p[ids], state.params)
         y_web = jax.vmap(jax.vmap(apply_fn, in_axes=(0, None)))(
             nb_params, data["x_ref"])                      # (M,P,R,C)
         target = jnp.mean(y_web, axis=1)
-        upd_keys = jax.vmap(
-            lambda i: jax.random.fold_in(rng_upd, i))(jnp.arange(m))
-        data_per = {k: data[k] for k in
-                    ("x_train", "y_train", "x_ref", "y_ref")}
-        params, opt_state, tm = batched_local_update(
-            apply_fn, optimizer, fed, state.params, state.opt_state, data_per, target,
-          jnp.ones((m,), bool), upd_keys)
-        metrics = {"mean_loss": jnp.mean(tm["loss"])}
-        return state._replace(params=params, opt_state=opt_state, rng=rng,
-                              round=state.round + 1), metrics
+        return _update_round(apply_fn, optimizer, fed, state,
+                             _own_data_per(data), target,
+                             jnp.ones((m,), bool), rng, rng_upd)
 
-    return round_fn
+    def global_round(state: FedState, data):
+        rng, rng_pick, rng_upd = jax.random.split(state.rng, 3)
+        ids = jax.vmap(
+            lambda k: jax.random.choice(k, m, (num_peers,), replace=False)
+        )(jnp.stack(list(jax.random.split(rng_pick, m))))   # (M,P)
+        state, metrics = _distill_from(state, data, ids, rng, rng_upd)
+        return state, ids, metrics
+
+    def gossip_round(state: FedState, data, ids):
+        rng, rng_upd = jax.random.split(state.rng)
+        state, metrics = _distill_from(state, data, ids, rng, rng_upd)
+        return state, ids, metrics
+
+    return RoundProgram("proxyfl", global_round, gossip_round)
 
 
-def make_kdpdfl_round(apply_fn, optimizer, fed: FedConfig):
-    """Similarity-only selection: top-N by output-KL on own ref set."""
+def kdpdfl_program(apply_fn, optimizer, fed: FedConfig) -> RoundProgram:
+    """Similarity-only selection: top-N by output-KL on own ref set.
+    The global round pays the O(M^2) all-pairs forwards; gossip epochs
+    reuse the cached neighbor ids at O(M*N)."""
     m = fed.num_clients
     n = min(fed.num_neighbors, m - 1)
 
-    def round_fn(state: FedState, data):
+    def global_round(state: FedState, data):
         rng, rng_upd = jax.random.split(state.rng)
         # all-pairs outputs on each client's own reference set
         y_all = jax.vmap(                                   # over i (ref set)
@@ -128,18 +152,45 @@ def make_kdpdfl_round(apply_fn, optimizer, fed: FedConfig):
         picked = jnp.take_along_axis(
             y_all, ids[:, :, None, None], axis=1)           # (M,N,R,C)
         target = jnp.mean(picked, axis=1)
-        upd_keys = jax.vmap(
-            lambda i: jax.random.fold_in(rng_upd, i))(jnp.arange(m))
-        data_per = {k: data[k] for k in
-                    ("x_train", "y_train", "x_ref", "y_ref")}
-        params, opt_state, tm = batched_local_update(
-            apply_fn, optimizer, fed, state.params, state.opt_state, data_per, target,
-          jnp.ones((m,), bool), upd_keys)
-        metrics = {"mean_loss": jnp.mean(tm["loss"])}
-        return state._replace(params=params, opt_state=opt_state, rng=rng,
-                              round=state.round + 1), metrics
+        state, metrics = _update_round(
+            apply_fn, optimizer, fed, state, _own_data_per(data),
+            target, jnp.ones((m,), bool), rng, rng_upd)
+        return state, ids, metrics
 
-    return round_fn
+    def gossip_round(state: FedState, data, ids):
+        rng, rng_upd = jax.random.split(state.rng)
+        nb_params = jax.tree.map(lambda p: p[ids], state.params)
+        y_nb = jax.vmap(jax.vmap(apply_fn, in_axes=(0, None)))(
+            nb_params, data["x_ref"])                      # (M,N,R,C)
+        target = jnp.mean(y_nb, axis=1)
+        state, metrics = _update_round(
+            apply_fn, optimizer, fed, state, _own_data_per(data),
+            target, jnp.ones((m,), bool), rng, rng_upd)
+        return state, ids, metrics
+
+    return RoundProgram("kdpdfl", global_round, gossip_round)
+
+
+# ---------------------------------------------------------------------------
+# classic per-round adapters
+# ---------------------------------------------------------------------------
+def make_silo_round(apply_fn, optimizer, fed: FedConfig):
+    return program_round(silo_program(apply_fn, optimizer, fed))
+
+
+def make_fedmd_round(apply_fn, optimizer, fed: FedConfig, shared_ref_x):
+    return program_round(fedmd_program(apply_fn, optimizer, fed,
+                                       shared_ref_x))
+
+
+def make_proxyfl_round(apply_fn, optimizer, fed: FedConfig,
+                       num_peers: int = 3):
+    return program_round(proxyfl_program(apply_fn, optimizer, fed,
+                                         num_peers=num_peers))
+
+
+def make_kdpdfl_round(apply_fn, optimizer, fed: FedConfig):
+    return program_round(kdpdfl_program(apply_fn, optimizer, fed))
 
 
 BASELINES = {
@@ -147,4 +198,11 @@ BASELINES = {
     "fedmd": make_fedmd_round,
     "proxyfl": make_proxyfl_round,
     "kdpdfl": make_kdpdfl_round,
+}
+
+BASELINE_PROGRAMS = {
+    "silo": silo_program,
+    "fedmd": fedmd_program,
+    "proxyfl": proxyfl_program,
+    "kdpdfl": kdpdfl_program,
 }

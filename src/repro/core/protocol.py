@@ -13,10 +13,13 @@ phases instead of forking a monolith (DESIGN.md §7):
                   (Alg. 1 l.19, step 6b)
   announce_phase  new LSH codes, rankings, commitments (step 7)
 
-`make_wpfed_round` composes them into one federation iteration for all
-M clients. Client models are homogeneous pytrees stacked on a leading
-(M,) axis; `launch/fed.py` shards that axis across the mesh for
-TPU-scale runs.
+`wpfed_program` composes them into a `core.rounds.RoundProgram`: the
+global round (all four phases — one federation iteration for all M
+clients) plus the gossip epoch (exchange + update against the cached
+`SelectResult`, DESIGN.md §8). `make_wpfed_round` is the classic sync
+adapter over that program. Client models are homogeneous pytrees
+stacked on a leading (M,) axis; `launch/fed.py` shards that axis
+across the mesh for TPU-scale runs.
 """
 from __future__ import annotations
 
@@ -29,6 +32,7 @@ from repro.configs.paper_models import FedConfig
 from repro.core import distill, lsh, neighbor, ranking, verify
 from repro.core.chain import fnv1a_commit
 from repro.core.exchange import ExchangeResult, all_in_one_exchange
+from repro.core.rounds import RoundProgram, program_round
 from repro.optim.optimizers import Optimizer, apply_updates
 
 REF_MODES = ("personal", "public")
@@ -224,15 +228,47 @@ def batched_local_update(apply_fn, optimizer, fed: FedConfig, params,
 
 
 # ---------------------------------------------------------------------------
-# the composed round
+# the composed round program
 # ---------------------------------------------------------------------------
-def make_wpfed_round(apply_fn: Callable, optimizer: Optimizer,
-                     fed: FedConfig):
-    """Returns round_fn(state, data) -> (state, metrics). `data` is the
-    stacked federated dataset dict (see data.federated.stacked)."""
+def _round_metrics(sel: SelectResult, exch: ExchangeResult, train_metrics,
+                   round_idx) -> Dict[str, jnp.ndarray]:
+    """Per-round metrics shared by the global round and gossip epochs
+    (identical structure so a reselection period stacks under scan)."""
+    n_sel = jnp.sum(sel.sel_mask.astype(jnp.float32))
+    return {
+        "round": round_idx,
+        "mean_loss": jnp.mean(train_metrics["loss"]),
+        "mean_local_loss": jnp.mean(train_metrics["local_loss"]),
+        "mean_ref_loss": jnp.mean(train_metrics["ref_loss"]),
+        # mean over the SELECTED slots only (padding slots would
+        # otherwise dilute the average with zeros)
+        "mean_neighbor_loss": (
+            jnp.sum(jnp.where(sel.sel_mask, exch.l_ij, 0.0))
+            / jnp.maximum(n_sel, 1.0)),
+        "valid_neighbor_frac": jnp.mean(
+            exch.valid_mask.astype(jnp.float32)),
+        "honest_reporter_frac": jnp.mean(
+            sel.reporter_mask.astype(jnp.float32)),
+        "neighbor_ids": sel.ids,
+        "valid_mask": exch.valid_mask,
+        "ranking_scores": sel.scores,
+    }
 
-    def round_fn(state: FedState, data: Dict[str, jnp.ndarray]
-                 ) -> Tuple[FedState, Dict[str, jnp.ndarray]]:
+
+def wpfed_program(apply_fn: Callable, optimizer: Optimizer,
+                  fed: FedConfig) -> RoundProgram:
+    """WPFed as a round program (DESIGN.md §8).
+
+    global_round is Algorithm 1 verbatim — all four phases; its cache
+    is the round's `SelectResult`. gossip_round is the cheap epoch
+    between reselections: exchange + update against the CACHED
+    selection, with codes / rankings / commitments frozen (no
+    announce_phase, no LSH re-code), so a reselection period costs one
+    global round plus G-1 exchange/update epochs.
+    """
+
+    def global_round(state: FedState, data: Dict[str, jnp.ndarray]
+                     ) -> Tuple[FedState, SelectResult, Dict]:
         rng, rng_sel, rng_upd = jax.random.split(state.rng, 3)
 
         sel = select_phase(state, fed, rng=rng_sel)
@@ -242,30 +278,33 @@ def make_wpfed_round(apply_fn: Callable, optimizer: Optimizer,
             data, exch, rng_upd)
         ann = announce_phase(fed, params, sel, exch, state.round)
 
-        n_sel = jnp.sum(sel.sel_mask.astype(jnp.float32))
-        metrics = {
-            "round": state.round,
-            "mean_loss": jnp.mean(train_metrics["loss"]),
-            "mean_local_loss": jnp.mean(train_metrics["local_loss"]),
-            "mean_ref_loss": jnp.mean(train_metrics["ref_loss"]),
-            # mean over the SELECTED slots only (padding slots would
-            # otherwise dilute the average with zeros)
-            "mean_neighbor_loss": (
-                jnp.sum(jnp.where(sel.sel_mask, exch.l_ij, 0.0))
-                / jnp.maximum(n_sel, 1.0)),
-            "valid_neighbor_frac": jnp.mean(
-                exch.valid_mask.astype(jnp.float32)),
-            "honest_reporter_frac": jnp.mean(
-                sel.reporter_mask.astype(jnp.float32)),
-            "neighbor_ids": sel.ids,
-            "valid_mask": exch.valid_mask,
-            "ranking_scores": sel.scores,
-        }
+        metrics = _round_metrics(sel, exch, train_metrics, state.round)
         new_state = FedState(params, opt_state, ann.codes, ann.rankings,
                              ann.commitments, rng, state.round + 1)
-        return new_state, metrics
+        return new_state, sel, metrics
 
-    return round_fn
+    def gossip_round(state: FedState, data: Dict[str, jnp.ndarray],
+                     sel: SelectResult
+                     ) -> Tuple[FedState, SelectResult, Dict]:
+        rng, rng_upd = jax.random.split(state.rng)
+        exch = exchange_phase(apply_fn, fed, state.params, data, sel)
+        params, opt_state, train_metrics = update_phase(
+            apply_fn, optimizer, fed, state.params, state.opt_state,
+            data, exch, rng_upd)
+        metrics = _round_metrics(sel, exch, train_metrics, state.round)
+        new_state = state._replace(params=params, opt_state=opt_state,
+                                   rng=rng, round=state.round + 1)
+        return new_state, sel, metrics
+
+    return RoundProgram("wpfed", global_round, gossip_round)
+
+
+def make_wpfed_round(apply_fn: Callable, optimizer: Optimizer,
+                     fed: FedConfig):
+    """Classic sync API: round_fn(state, data) -> (state, metrics) —
+    the adapter over `wpfed_program`'s global round. `data` is the
+    stacked federated dataset dict (see data.federated.stacked)."""
+    return program_round(wpfed_program(apply_fn, optimizer, fed))
 
 
 def evaluate(apply_fn, state: FedState, data, honest_mask=None):

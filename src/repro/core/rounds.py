@@ -1,0 +1,226 @@
+"""Round-program engine: ONE schedule API for the sync WPFed round,
+gossip epochs, and all baselines (DESIGN.md §8).
+
+A federation method is a `RoundProgram` — two typed round bodies over
+`FedState` (or any state pytree with `.round`):
+
+  global_round(state, data) -> (state, cache, metrics)
+      the full (expensive) composition — for WPFed: §3.6 reveal
+      verification + LSH re-code + fused top-N re-selection, the
+      all-in-one exchange, local updates, and the next announcement.
+      `cache` is the program's selection cache (for WPFed the
+      `SelectResult`; peer ids for the gossip baselines), threaded
+      into the gossip epochs that follow.
+  gossip_round(state, data, cache) -> (state, cache, metrics)
+      a cheap epoch that REUSES the cached selection: exchange +
+      update only — no re-code, no ranking/commitment announcement.
+      This is the ProxyFL-style peer epoch (Kalra et al. 23) / P4
+      peer-to-peer round (Maheri et al. 24) between global
+      re-selections.
+
+`Schedule(reselect_every=G)` partitions the round axis into
+reselection periods: one global round followed by G-1 gossip epochs.
+`make_segment_fn` compiles a whole period into ONE XLA program (the
+gossip epochs run under `jax.lax.scan`), and `run_rounds` drives
+segments with host sync only once per reselection — the `on_reselect`
+callback is where `core.chain.Blockchain` publishing lives
+(launch/fed.py, examples/wpfed_federation.py). This replaces the
+per-round Python loops that previously forked per method.
+
+`Schedule(reselect_every=1)` reproduces the classic sync protocol
+bit-exactly for WPFed and every baseline (regression-tested in
+tests/test_rounds_engine.py).
+
+This module deliberately imports no `repro.core` siblings at module
+level: `core.protocol` / `core.baselines` import `RoundProgram` from
+here, and `make_program` resolves them via function-level imports
+(the `repro.core.backends` pattern).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class RoundProgram(NamedTuple):
+    """A federation method as a (global round, gossip epoch) pair."""
+    name: str
+    global_round: Callable  # (state, data) -> (state, cache, metrics)
+    gossip_round: Optional[Callable] = None  # (state, data, cache) -> same
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """Reselection schedule: run the global round every
+    `reselect_every` rounds, gossip epochs in between. 1 == the
+    paper's fully synchronous protocol."""
+    reselect_every: int = 1
+
+    def __post_init__(self):
+        if self.reselect_every < 1:
+            raise ValueError(
+                f"reselect_every must be >= 1, got {self.reselect_every}")
+
+    def segments(self, rounds: int):
+        """Yield (start_round, length) per reselection period."""
+        r0 = 0
+        while r0 < rounds:
+            yield r0, min(self.reselect_every, rounds - r0)
+            r0 += self.reselect_every
+
+
+SCHEDULES = ("sync", "gossip")
+
+
+def resolve_schedule(name: str = "sync", reselect_every: int = 0) -> Schedule:
+    """One-place schedule validation (the repro.core.backends pattern —
+    launch/fed.py, examples and benchmarks all construct schedules
+    here, so the string/argument checking lives in exactly one spot).
+
+      "sync"   -> Schedule(1), the per-round protocol; an explicit
+                  reselect_every other than 0/1 is an error, not
+                  silently ignored.
+      "gossip" -> Schedule(reselect_every or 4).
+    """
+    if name not in SCHEDULES:
+        raise ValueError(
+            f"unknown schedule: {name!r} (expected one of {SCHEDULES})")
+    if name == "sync":
+        if reselect_every not in (0, 1):
+            raise ValueError(
+                "schedule 'sync' re-selects every round; pass "
+                "schedule='gossip' to use reselect_every="
+                f"{reselect_every}")
+        return Schedule(1)
+    return Schedule(reselect_every or 4)
+
+
+def program_round(program: RoundProgram) -> Callable:
+    """Adapt a program's global round to the classic
+    `round_fn(state, data) -> (state, metrics)` signature
+    (make_wpfed_round and the make_*_round baselines are this adapter
+    over their programs)."""
+
+    def round_fn(state, data):
+        state, _cache, metrics = program.global_round(state, data)
+        return state, metrics
+
+    return round_fn
+
+
+def make_segment_fn(program: RoundProgram, length: int, *,
+                    eval_fn: Optional[Callable] = None) -> Callable:
+    """Compile-ready body for one reselection period of `length`
+    rounds: the global round, then length-1 gossip epochs under
+    `jax.lax.scan` threading (state, cache). Returns
+    segment_fn(state, data) -> (state, metrics) with every metric
+    stacked on a leading (length,) round axis.
+
+    `eval_fn(state, data) -> dict` (jittable) is merged into each
+    round's metrics — this keeps per-round evaluation inside the
+    compiled segment instead of forcing a host sync per round.
+    """
+    if length < 1:
+        raise ValueError(f"segment length must be >= 1, got {length}")
+    if length > 1 and program.gossip_round is None:
+        raise ValueError(
+            f"program {program.name!r} has no gossip_round; "
+            "only Schedule(reselect_every=1) can run it")
+
+    def seg_fn(state, data):
+        state, cache, m0 = program.global_round(state, data)
+        if eval_fn is not None:
+            m0 = {**m0, **eval_fn(state, data)}
+        if length == 1:
+            # no scan: the segment IS the classic sync round
+            # (bit-exactness with the pre-engine round is regression-
+            # tested; keep this path free of extra graph structure)
+            return state, jax.tree.map(lambda a: jnp.asarray(a)[None], m0)
+
+        def body(carry, _):
+            st, ca = carry
+            st, ca, m = program.gossip_round(st, data, ca)
+            if eval_fn is not None:
+                m = {**m, **eval_fn(st, data)}
+            return (st, ca), m
+
+        (state, _cache), ms = jax.lax.scan(
+            body, (state, cache), None, length=length - 1)
+        metrics = jax.tree.map(
+            lambda a, b: jnp.concatenate([jnp.asarray(a)[None], b], axis=0),
+            m0, ms)
+        return state, metrics
+
+    return seg_fn
+
+
+def run_rounds(program: RoundProgram, state, data, *, rounds: int,
+               schedule: Optional[Schedule] = None,
+               eval_fn: Optional[Callable] = None,
+               on_reselect: Optional[Callable] = None,
+               log: Optional[Callable] = None
+               ) -> Tuple[Any, List[Dict[str, Any]]]:
+    """Drive `rounds` federation rounds under `schedule`.
+
+    One jit-compiled segment per reselection period (compiled once per
+    distinct length — at most two: full periods + a shorter tail);
+    `on_reselect(start_round, state)` runs on host after each period
+    with the period's announcements in `state` (codes / rankings /
+    commitments are frozen across its gossip epochs), which is where
+    the host `Blockchain` ledger publishes.
+
+    Returns (final_state, history): one dict per round holding every
+    scalar metric (plus `eval_fn` outputs) as a Python number and the
+    absolute "round" index.
+    """
+    schedule = schedule or Schedule()
+    seg_fns: Dict[int, Callable] = {}
+    history: List[Dict[str, Any]] = []
+    for r0, length in schedule.segments(rounds):
+        if length not in seg_fns:
+            seg_fns[length] = jax.jit(
+                make_segment_fn(program, length, eval_fn=eval_fn))
+        t0 = time.time()
+        state, metrics = seg_fns[length](state, data)
+        jax.block_until_ready(metrics)
+        dt = time.time() - t0
+        if on_reselect is not None:
+            on_reselect(r0, state)
+        for i in range(length):
+            entry: Dict[str, Any] = {}
+            for k, v in metrics.items():
+                if getattr(v, "ndim", None) == 1:  # per-round scalar
+                    entry[k] = (int(v[i]) if jnp.issubdtype(v.dtype, jnp.integer)
+                                else float(v[i]))
+            entry["round"] = r0 + i
+            history.append(entry)
+        if log is not None:
+            last = history[-1]
+            parts = [f"{k} {last[k]:.4f}" for k in ("acc", "mean_loss")
+                     if k in last]
+            log(f"round {last['round']:3d} " + " ".join(parts)
+                + f" ({dt:.1f}s/{length}r)")
+    return state, history
+
+
+PROGRAMS = ("wpfed", "silo", "fedmd", "proxyfl", "kdpdfl")
+
+
+def make_program(method: str, apply_fn, optimizer, fed,
+                 **kwargs) -> RoundProgram:
+    """One-place program construction for every method name
+    (`benchmarks.common` and the launchers resolve through here).
+    `fedmd` requires shared_ref_x=...; `proxyfl` accepts num_peers=."""
+    # function-level imports: protocol/baselines import RoundProgram
+    # from this module (see the module docstring)
+    from repro.core import baselines, protocol
+    makers = {"wpfed": protocol.wpfed_program,
+              **baselines.BASELINE_PROGRAMS}
+    if method not in makers:
+        raise KeyError(
+            f"unknown method: {method!r} (expected one of {PROGRAMS})")
+    return makers[method](apply_fn, optimizer, fed, **kwargs)

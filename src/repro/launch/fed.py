@@ -1,8 +1,16 @@
 """Federated launcher: run the WPFed protocol at laptop scale (paper
-reproduction) or lower the round onto the production mesh with the
-client axis sharded over "data" (TPU scale-out — beyond-paper).
+reproduction) or lower a round program onto the production mesh with
+the client axis sharded over "data" (TPU scale-out — beyond-paper).
+
+Rounds run through the round-program engine (`core.rounds.run_rounds`,
+DESIGN.md §8): `--schedule sync` is the paper's per-round protocol,
+`--schedule gossip --reselect-every G` runs the global LSH
+re-selection every G rounds with cheap gossip epochs in between, and
+the host `Blockchain` ledger records one block per reselection.
 
     PYTHONPATH=src python -m repro.launch.fed --dataset mnist --rounds 10
+    PYTHONPATH=src python -m repro.launch.fed --schedule gossip \
+        --reselect-every 4 --rounds 12
     PYTHONPATH=src python -m repro.launch.fed --dryrun   # 256-client mesh
 """
 from __future__ import annotations
@@ -10,14 +18,16 @@ from __future__ import annotations
 import argparse
 import functools
 import json
-import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.paper_models import (FedConfig, PAPER_FED_OPTIMA,
                                         aecg_tcn, mnist_cnn, seeg_tcn)
-from repro.core import evaluate, init_state, make_wpfed_round
+from repro.core import (evaluate, init_state, make_segment_fn,
+                        resolve_schedule, run_rounds, wpfed_program)
+from repro.core.chain import Blockchain, lsh_code_hex, sha256_commit
 from repro.data import DATASETS
 from repro.models import apply_client_model, init_client_model
 from repro.optim import adam
@@ -25,18 +35,43 @@ from repro.optim import adam
 MODEL_FOR = {"mnist": mnist_cnn, "aecg": aecg_tcn, "seeg": seeg_tcn}
 
 
+def chain_publisher(chain: Blockchain, num_clients: int):
+    """`on_reselect` callback: publish a reselection's announcements
+    a_i = {lsh_i, C_i} plus the revealed rankings to the host ledger
+    (WPFed §2.2 — codes/rankings/commitments are frozen across the
+    period's gossip epochs, so one block per reselection is the
+    complete record)."""
+
+    def publish(round_idx: int, state) -> None:
+        codes = np.asarray(state.codes)
+        rankings = np.asarray(state.rankings)
+        ann = {i: {"lsh": lsh_code_hex(codes[i]),
+                   "commit": sha256_commit(rankings[i])}
+               for i in range(num_clients)}
+        reveals = {i: [int(x) for x in rankings[i]]
+                   for i in range(num_clients)}
+        chain.publish_round(round_idx + 1, ann, reveals=reveals)
+
+    return publish
+
+
 def run_federation(dataset: str = "mnist", rounds: int = 10,
                    num_clients: int = 0, seed: int = 0, fed: FedConfig = None,
                    backend: str = "auto", ref_mode: str = "personal",
+                   schedule: str = "sync", reselect_every: int = 0,
                    log=print):
     """`backend` drives BOTH kernel-backed subsystems (selection and
     exchange — one flag, resolved by repro.core.backends.resolve).
     An explicit `fed` config wins outright: backend/ref_mode apply only
     to the default-constructed config (asserted, not silently dropped).
+    `schedule`/`reselect_every` resolve via core.rounds.resolve_schedule.
+    Publishes every reselection to a host `Blockchain` and verifies the
+    chain before returning (state, history).
     """
     if fed is not None and (backend != "auto" or ref_mode != "personal"):
         raise ValueError("pass backend/ref_mode inside the explicit "
                          "FedConfig, not alongside it")
+    sched = resolve_schedule(schedule, reselect_every)
     ds_fn = DATASETS[dataset]
     ds = ds_fn(seed=seed) if num_clients == 0 else \
         ds_fn(num_clients=num_clients, seed=seed)
@@ -51,36 +86,35 @@ def run_federation(dataset: str = "mnist", rounds: int = 10,
     opt = adam(fed.lr)
     data = {k: jnp.asarray(v) for k, v in ds.stacked().items()}
     state = init_state(apply_fn, init_fn, opt, fed, jax.random.PRNGKey(seed))
-    round_fn = jax.jit(make_wpfed_round(apply_fn, opt, fed))
-    history = []
-    for r in range(rounds):
-        t0 = time.time()
-        state, metrics = round_fn(state, data)
-        ev = evaluate(apply_fn, state, data)
-        history.append({"round": r, "acc": float(ev["mean_acc"]),
-                        "loss": float(metrics["mean_loss"])})
-        log(f"round {r:3d} acc {float(ev['mean_acc']):.4f} "
-            f"loss {float(metrics['mean_loss']):.4f} "
-            f"({time.time() - t0:.1f}s)")
+    chain = Blockchain()
+    state, history = run_rounds(
+        wpfed_program(apply_fn, opt, fed), state, data, rounds=rounds,
+        schedule=sched,
+        eval_fn=lambda st, d: {"acc": evaluate(apply_fn, st, d)["mean_acc"]},
+        on_reselect=chain_publisher(chain, fed.num_clients), log=log)
+    assert chain.verify_chain(), "host ledger integrity violated"
     return state, history
 
 
 def dryrun_fed_round(num_clients: int = 256, arch: str = "phi3-medium-14b",
-                     backend: str = "kernel", ref_mode: str = "personal"):
-    """Beyond-paper: lower one WPFed round with REDUCED-transformer
-    clients sharded over the production mesh's data axis — proves the
-    protocol itself scales out (the paper simulated <=40 clients on GPU).
-    Defaults to the kernel backends so the lowering exercises the
-    batched LSH + fused selection + fused exchange kernels under
-    sharding; ref_mode="public" lowers the M-forward shared-reference
-    exchange instead of the M*N personal one (DESIGN.md §7).
+                     backend: str = "kernel", ref_mode: str = "personal",
+                     reselect_every: int = 1):
+    """Beyond-paper: lower one WPFed reselection period with
+    REDUCED-transformer clients sharded over the production mesh's data
+    axis — proves the protocol itself scales out (the paper simulated
+    <=40 clients on GPU). Defaults to the kernel backends so the
+    lowering exercises the batched LSH + fused selection + fused
+    exchange kernels under sharding; ref_mode="public" lowers the
+    M-forward shared-reference exchange instead of the M*N personal
+    one (DESIGN.md §7). `reselect_every=G` lowers the full segment —
+    one global round plus G-1 gossip epochs under lax.scan
+    (DESIGN.md §8).
 
     Must be called in a fresh process with XLA_FLAGS set (see dryrun.py).
     """
     from repro.configs import get_config
     from repro.launch.mesh import make_production_mesh
     from repro.models.transformer import forward, init_params
-    from repro.sharding import named
     from jax.sharding import NamedSharding, PartitionSpec as P
 
     cfg = get_config(arch).reduced()
@@ -96,7 +130,8 @@ def dryrun_fed_round(num_clients: int = 256, arch: str = "phi3-medium-14b",
 
     init_fn = functools.partial(init_params, cfg, dtype=jnp.bfloat16)
     opt = adam(fed.lr)
-    round_fn = make_wpfed_round(apply_fn, opt, fed)
+    segment_fn = make_segment_fn(wpfed_program(apply_fn, opt, fed),
+                                 reselect_every)
 
     m, r, s = num_clients, 8, 32
     sds = jax.ShapeDtypeStruct
@@ -109,7 +144,6 @@ def dryrun_fed_round(num_clients: int = 256, arch: str = "phi3-medium-14b",
         "x_ref": sds((m, r, s), jnp.int32),
         "y_ref": sds((m, r), jnp.int32),
     }
-    cl = P("data")                                  # client axis sharding
 
     def spec_like(sd):
         return NamedSharding(mesh, P("data", *([None] * (len(sd.shape) - 1))))
@@ -121,7 +155,7 @@ def dryrun_fed_round(num_clients: int = 256, arch: str = "phi3-medium-14b",
         commitments=NamedSharding(mesh, P("data")))
     data_shard = jax.tree.map(spec_like, data_sds)
     with mesh:
-        lowered = jax.jit(round_fn,
+        lowered = jax.jit(segment_fn,
                           in_shardings=(state_shard, data_shard),
                           out_shardings=None).lower(state_sds, data_sds)
         compiled = lowered.compile()
@@ -133,6 +167,7 @@ def dryrun_fed_round(num_clients: int = 256, arch: str = "phi3-medium-14b",
         "fed_round_clients": m,
         "client_arch": cfg.name,
         "ref_mode": ref_mode,
+        "reselect_every": reselect_every,
         "mesh": "16x16",
         "flops_per_device": float(cost.get("flops", 0)),
         "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
@@ -148,7 +183,7 @@ def main(argv=None):
     ap.add_argument("--clients", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--dryrun", action="store_true",
-                    help="lower a 256-client WPFed round on the 16x16 mesh")
+                    help="lower a 256-client WPFed segment on the 16x16 mesh")
     ap.add_argument("--backend", default="auto",
                     choices=["auto", "kernel", "oracle"],
                     help="kernel-backed subsystem backend — drives both "
@@ -158,21 +193,33 @@ def main(argv=None):
                     help="personal: each client's own reference set "
                          "(M*N forwards); public: one shared reference "
                          "set, exchange is a gather (DESIGN.md §7)")
+    ap.add_argument("--schedule", default="sync",
+                    choices=["sync", "gossip"],
+                    help="sync: re-select every round (the paper); "
+                         "gossip: global re-selection every "
+                         "--reselect-every rounds, cheap gossip epochs "
+                         "in between (DESIGN.md §8)")
+    ap.add_argument("--reselect-every", type=int, default=0,
+                    help="gossip period G (0 = schedule default)")
     args = ap.parse_args(argv)
     if args.dryrun:
         import os
         assert "xla_force_host_platform_device_count" in \
             os.environ.get("XLA_FLAGS", ""), \
             "run with XLA_FLAGS=--xla_force_host_platform_device_count=512"
+        sched = resolve_schedule(args.schedule, args.reselect_every)
         dryrun_fed_round(num_clients=args.clients or 256,
                          backend="kernel" if args.backend == "auto"
                          else args.backend,
-                         ref_mode=args.ref_mode)
+                         ref_mode=args.ref_mode,
+                         reselect_every=sched.reselect_every)
         return
     _, history = run_federation(args.dataset, args.rounds,
                                 num_clients=args.clients, seed=args.seed,
                                 backend=args.backend,
-                                ref_mode=args.ref_mode)
+                                ref_mode=args.ref_mode,
+                                schedule=args.schedule,
+                                reselect_every=args.reselect_every)
     print(json.dumps(history[-3:], indent=1))
 
 

@@ -268,16 +268,18 @@ def test_dryrun_threads_clients_and_ref_mode(monkeypatch):
     calls = {}
 
     def fake_dryrun(num_clients=256, arch="phi3-medium-14b",
-                    backend="kernel", ref_mode="personal"):
+                    backend="kernel", ref_mode="personal",
+                    reselect_every=1):
         calls.update(num_clients=num_clients, backend=backend,
-                     ref_mode=ref_mode)
+                     ref_mode=ref_mode, reselect_every=reselect_every)
 
     monkeypatch.setattr(fed_launch, "dryrun_fed_round", fake_dryrun)
     monkeypatch.setenv("XLA_FLAGS",
                        "--xla_force_host_platform_device_count=512")
     fed_launch.main(["--dryrun", "--clients", "32", "--ref-mode", "public"])
     assert calls == {"num_clients": 32, "backend": "kernel",
-                     "ref_mode": "public"}
-    fed_launch.main(["--dryrun", "--backend", "oracle"])
+                     "ref_mode": "public", "reselect_every": 1}
+    fed_launch.main(["--dryrun", "--backend", "oracle",
+                     "--schedule", "gossip", "--reselect-every", "4"])
     assert calls == {"num_clients": 256, "backend": "oracle",
-                     "ref_mode": "personal"}
+                     "ref_mode": "personal", "reselect_every": 4}

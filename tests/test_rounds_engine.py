@@ -1,0 +1,369 @@
+"""Round-program engine (core.rounds, DESIGN.md §8).
+
+The load-bearing guarantees:
+  * Schedule(reselect_every=1) through the engine is BIT-EXACT with the
+    pre-engine sync compositions — for WPFed and all four baselines the
+    legacy round bodies are copied verbatim into this module as oracles,
+    so any numeric drift in the re-expression fails here.
+  * Gossip epochs reuse the reselection's SelectResult: codes, rankings
+    and commitments are frozen between reselections while params train.
+  * run_rounds syncs with the host once per reselection (the Blockchain
+    publishing point) and reports per-round scalar history.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (FedState, Schedule, announce_phase, evaluate,
+                        exchange_phase, init_state, make_program,
+                        make_segment_fn, run_rounds, select_phase,
+                        update_phase, wpfed_program)
+from repro.core.chain import Blockchain
+from repro.core.protocol import batched_local_update
+from repro.core.rounds import (RoundProgram, program_round,
+                               resolve_schedule)
+from repro.core import verify
+
+
+def _bitwise_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        x, y = np.asarray(x), np.asarray(y)
+        assert x.dtype == y.dtype and x.shape == y.shape
+        assert x.tobytes() == y.tobytes()
+
+
+@pytest.fixture(scope="module")
+def ctx(tiny_fed):
+    f = dict(tiny_fed)
+    f["state0"] = init_state(f["apply_fn"], f["init_fn"], f["opt"],
+                             f["fed"], jax.random.PRNGKey(0))
+    return f
+
+
+# ---------------------------------------------------------------------------
+# legacy oracles: the pre-engine round bodies, verbatim
+# ---------------------------------------------------------------------------
+def _legacy_wpfed_round(apply_fn, optimizer, fed):
+    def round_fn(state, data):
+        rng, rng_sel, rng_upd = jax.random.split(state.rng, 3)
+        sel = select_phase(state, fed, rng=rng_sel)
+        exch = exchange_phase(apply_fn, fed, state.params, data, sel)
+        params, opt_state, train_metrics = update_phase(
+            apply_fn, optimizer, fed, state.params, state.opt_state,
+            data, exch, rng_upd)
+        ann = announce_phase(fed, params, sel, exch, state.round)
+        n_sel = jnp.sum(sel.sel_mask.astype(jnp.float32))
+        metrics = {
+            "mean_loss": jnp.mean(train_metrics["loss"]),
+            "mean_neighbor_loss": (
+                jnp.sum(jnp.where(sel.sel_mask, exch.l_ij, 0.0))
+                / jnp.maximum(n_sel, 1.0)),
+            "valid_neighbor_frac": jnp.mean(
+                exch.valid_mask.astype(jnp.float32)),
+        }
+        new_state = FedState(params, opt_state, ann.codes, ann.rankings,
+                             ann.commitments, rng, state.round + 1)
+        return new_state, metrics
+    return round_fn
+
+
+def _legacy_silo_round(apply_fn, optimizer, fed):
+    m = fed.num_clients
+
+    def round_fn(state, data):
+        rng, rng_upd = jax.random.split(state.rng)
+        upd_keys = jax.vmap(
+            lambda i: jax.random.fold_in(rng_upd, i))(jnp.arange(m))
+        dummy = jnp.zeros_like(
+            jax.vmap(apply_fn)(state.params, data["x_ref"]))
+        data_per = {k: data[k] for k in
+                    ("x_train", "y_train", "x_ref", "y_ref")}
+        params, opt_state, tm = batched_local_update(
+            apply_fn, optimizer, fed, state.params, state.opt_state,
+            data_per, dummy, jnp.zeros((m,), bool), upd_keys)
+        return state._replace(params=params, opt_state=opt_state, rng=rng,
+                              round=state.round + 1), \
+            {"mean_loss": jnp.mean(tm["loss"])}
+    return round_fn
+
+
+def _legacy_fedmd_round(apply_fn, optimizer, fed, shared_ref_x):
+    m = fed.num_clients
+
+    def round_fn(state, data):
+        rng, rng_upd = jax.random.split(state.rng)
+        logits = jax.vmap(apply_fn, in_axes=(0, None))(
+            state.params, shared_ref_x)
+        consensus = jnp.mean(logits, axis=0)
+        upd_keys = jax.vmap(
+            lambda i: jax.random.fold_in(rng_upd, i))(jnp.arange(m))
+        data_per = {k: data[k] for k in ("x_train", "y_train")}
+        data_per["x_ref"] = jnp.broadcast_to(
+            shared_ref_x[None], (m,) + shared_ref_x.shape)
+        data_per["y_ref"] = jnp.zeros((m, shared_ref_x.shape[0]), jnp.int32)
+        params, opt_state, tm = batched_local_update(
+            apply_fn, optimizer, fed, state.params, state.opt_state,
+            data_per, jnp.broadcast_to(consensus[None], logits.shape),
+            jnp.ones((m,), bool), upd_keys)
+        return state._replace(params=params, opt_state=opt_state, rng=rng,
+                              round=state.round + 1), \
+            {"mean_loss": jnp.mean(tm["loss"])}
+    return round_fn
+
+
+def _legacy_proxyfl_round(apply_fn, optimizer, fed, num_peers=3):
+    m = fed.num_clients
+
+    def round_fn(state, data):
+        rng, rng_pick, rng_upd = jax.random.split(state.rng, 3)
+        ids = jax.vmap(
+            lambda k: jax.random.choice(k, m, (num_peers,), replace=False)
+        )(jnp.stack(list(jax.random.split(rng_pick, m))))
+        nb_params = jax.tree.map(lambda p: p[ids], state.params)
+        y_web = jax.vmap(jax.vmap(apply_fn, in_axes=(0, None)))(
+            nb_params, data["x_ref"])
+        target = jnp.mean(y_web, axis=1)
+        upd_keys = jax.vmap(
+            lambda i: jax.random.fold_in(rng_upd, i))(jnp.arange(m))
+        data_per = {k: data[k] for k in
+                    ("x_train", "y_train", "x_ref", "y_ref")}
+        params, opt_state, tm = batched_local_update(
+            apply_fn, optimizer, fed, state.params, state.opt_state,
+            data_per, target, jnp.ones((m,), bool), upd_keys)
+        return state._replace(params=params, opt_state=opt_state, rng=rng,
+                              round=state.round + 1), \
+            {"mean_loss": jnp.mean(tm["loss"])}
+    return round_fn
+
+
+def _legacy_kdpdfl_round(apply_fn, optimizer, fed):
+    m = fed.num_clients
+    n = min(fed.num_neighbors, m - 1)
+
+    def round_fn(state, data):
+        rng, rng_upd = jax.random.split(state.rng)
+        y_all = jax.vmap(
+            jax.vmap(apply_fn, in_axes=(0, None))
+        )(jax.tree.map(
+            lambda p: jnp.broadcast_to(p[None], (m,) + p.shape),
+            state.params), data["x_ref"])
+        own = jax.vmap(apply_fn)(state.params, data["x_ref"])
+        kls = jax.vmap(lambda o, ys: jax.vmap(
+            lambda y: verify.kl_divergence(o, y))(ys))(own, y_all)
+        kls = jnp.where(jnp.eye(m, dtype=bool), jnp.inf, kls)
+        _, ids = jax.lax.top_k(-kls, n)
+        picked = jnp.take_along_axis(
+            y_all, ids[:, :, None, None], axis=1)
+        target = jnp.mean(picked, axis=1)
+        upd_keys = jax.vmap(
+            lambda i: jax.random.fold_in(rng_upd, i))(jnp.arange(m))
+        data_per = {k: data[k] for k in
+                    ("x_train", "y_train", "x_ref", "y_ref")}
+        params, opt_state, tm = batched_local_update(
+            apply_fn, optimizer, fed, state.params, state.opt_state,
+            data_per, target, jnp.ones((m,), bool), upd_keys)
+        return state._replace(params=params, opt_state=opt_state, rng=rng,
+                              round=state.round + 1), \
+            {"mean_loss": jnp.mean(tm["loss"])}
+    return round_fn
+
+
+_LEGACY = {"wpfed": _legacy_wpfed_round, "silo": _legacy_silo_round,
+           "fedmd": _legacy_fedmd_round, "proxyfl": _legacy_proxyfl_round,
+           "kdpdfl": _legacy_kdpdfl_round}
+
+
+# ---------------------------------------------------------------------------
+# Schedule / resolve_schedule
+# ---------------------------------------------------------------------------
+def test_schedule_segments_partition_rounds():
+    assert list(Schedule(4).segments(10)) == [(0, 4), (4, 4), (8, 2)]
+    assert list(Schedule(1).segments(3)) == [(0, 1), (1, 1), (2, 1)]
+    assert list(Schedule(5).segments(3)) == [(0, 3)]
+    assert list(Schedule(2).segments(0)) == []
+
+
+def test_schedule_validates():
+    with pytest.raises(ValueError):
+        Schedule(0)
+    with pytest.raises(ValueError):
+        Schedule(-1)
+
+
+def test_resolve_schedule_one_place():
+    assert resolve_schedule() == Schedule(1)
+    assert resolve_schedule("sync", 1) == Schedule(1)
+    assert resolve_schedule("gossip") == Schedule(4)       # default period
+    assert resolve_schedule("gossip", 2) == Schedule(2)
+    assert resolve_schedule("gossip", 1) == Schedule(1)
+    with pytest.raises(ValueError):
+        resolve_schedule("async")
+    with pytest.raises(ValueError):
+        resolve_schedule("sync", 4)      # not silently ignored
+
+
+def test_make_program_registry(ctx):
+    f = ctx
+    for name in ("wpfed", "silo", "proxyfl", "kdpdfl"):
+        prog = make_program(name, f["apply_fn"], f["opt"], f["fed"])
+        assert prog.name == name and prog.gossip_round is not None
+    prog = make_program("fedmd", f["apply_fn"], f["opt"], f["fed"],
+                        shared_ref_x=f["data"]["x_ref"][0])
+    assert prog.name == "fedmd"
+    with pytest.raises(KeyError):
+        make_program("dsgd", f["apply_fn"], f["opt"], f["fed"])
+
+
+def test_segment_fn_rejects_gossip_without_body(ctx):
+    prog = RoundProgram("global-only",
+                        wpfed_program(ctx["apply_fn"], ctx["opt"],
+                                      ctx["fed"]).global_round, None)
+    make_segment_fn(prog, 1)                               # fine
+    with pytest.raises(ValueError):
+        make_segment_fn(prog, 2)
+    with pytest.raises(ValueError):
+        make_segment_fn(prog, 0)
+
+
+# ---------------------------------------------------------------------------
+# Schedule(reselect_every=1) == the pre-engine sync rounds, bitwise
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("method", list(_LEGACY))
+def test_engine_sync_bitexact_vs_legacy(ctx, method):
+    f = ctx
+    kw = {"shared_ref_x": f["data"]["x_ref"][0]} if method == "fedmd" else {}
+    legacy = jax.jit(_LEGACY[method](f["apply_fn"], f["opt"], f["fed"], *kw.values()))
+    st_legacy = f["state0"]
+    for _ in range(3):
+        st_legacy, _m = legacy(st_legacy, f["data"])
+
+    prog = make_program(method, f["apply_fn"], f["opt"], f["fed"], **kw)
+    st_engine, history = run_rounds(prog, f["state0"], f["data"], rounds=3,
+                                    schedule=Schedule(1))
+    _bitwise_equal(st_legacy, st_engine)
+    assert [h["round"] for h in history] == [0, 1, 2]
+    assert np.isfinite(history[-1]["mean_loss"])
+
+
+def test_program_round_adapter_matches_global(ctx):
+    f = ctx
+    prog = wpfed_program(f["apply_fn"], f["opt"], f["fed"])
+    st_a, _cache, _m = jax.jit(prog.global_round)(f["state0"], f["data"])
+    st_b, _m2 = jax.jit(program_round(prog))(f["state0"], f["data"])
+    _bitwise_equal(st_a, st_b)
+
+
+# ---------------------------------------------------------------------------
+# gossip epochs: selection cache reuse
+# ---------------------------------------------------------------------------
+def test_gossip_freezes_codes_rankings_commitments(ctx):
+    f = ctx
+    prog = wpfed_program(f["apply_fn"], f["opt"], f["fed"])
+    st_g, _cache, _m = jax.jit(prog.global_round)(f["state0"], f["data"])
+    st, _hist = run_rounds(prog, f["state0"], f["data"], rounds=3,
+                           schedule=Schedule(3))
+    # announcements frozen across the period's gossip epochs...
+    _bitwise_equal((st_g.codes, st_g.rankings, st_g.commitments),
+                   (st.codes, st.rankings, st.commitments))
+    # ...while the models keep training and the round index advances
+    assert int(st.round) == 3
+    p_g, p = jax.tree.leaves(st_g.params)[0], jax.tree.leaves(st.params)[0]
+    assert not np.array_equal(np.asarray(p_g), np.asarray(p))
+
+
+def test_gossip_metrics_reuse_cached_neighbor_ids(ctx):
+    f = ctx
+    prog = wpfed_program(f["apply_fn"], f["opt"], f["fed"])
+    seg = jax.jit(make_segment_fn(prog, 3))
+    _st, metrics = seg(f["state0"], f["data"])
+    ids = np.asarray(metrics["neighbor_ids"])               # (3, M, N)
+    assert ids.shape[0] == 3
+    assert np.array_equal(ids[1], ids[0])
+    assert np.array_equal(ids[2], ids[0])
+    assert np.asarray(metrics["round"]).tolist() == [0, 1, 2]
+
+
+def test_reselection_changes_partners_across_segments(ctx):
+    """After a full period the global round re-codes and re-selects:
+    codes must differ across reselections (per-round LSH seed rotation)."""
+    f = ctx
+    prog = wpfed_program(f["apply_fn"], f["opt"], f["fed"])
+    st1, _ = run_rounds(prog, f["state0"], f["data"], rounds=2,
+                        schedule=Schedule(2))
+    st2, _ = run_rounds(prog, st1, f["data"], rounds=2, schedule=Schedule(2))
+    assert not bool(jnp.all(st1.codes == st2.codes))
+
+
+@pytest.mark.parametrize("method", ["silo", "fedmd", "proxyfl", "kdpdfl"])
+def test_baseline_gossip_epochs_run(ctx, method):
+    f = ctx
+    kw = {"shared_ref_x": f["data"]["x_ref"][0]} if method == "fedmd" else {}
+    prog = make_program(method, f["apply_fn"], f["opt"], f["fed"], **kw)
+    st, hist = run_rounds(prog, f["state0"], f["data"], rounds=4,
+                          schedule=Schedule(2))
+    assert int(st.round) == 4
+    assert all(np.isfinite(h["mean_loss"]) for h in hist)
+
+
+def test_proxyfl_gossip_reuses_peer_draw(ctx):
+    f = ctx
+    prog = make_program("proxyfl", f["apply_fn"], f["opt"], f["fed"])
+    st, ids, _m = jax.jit(prog.global_round)(f["state0"], f["data"])
+    st2, ids2, _m2 = jax.jit(prog.gossip_round)(st, f["data"], ids)
+    assert np.array_equal(np.asarray(ids), np.asarray(ids2))
+    assert int(st2.round) == 2
+
+
+# ---------------------------------------------------------------------------
+# run_rounds driver: host sync, history, ledger
+# ---------------------------------------------------------------------------
+def test_on_reselect_fires_once_per_period(ctx):
+    f = ctx
+    prog = wpfed_program(f["apply_fn"], f["opt"], f["fed"])
+    calls = []
+    st, hist = run_rounds(prog, f["state0"], f["data"], rounds=5,
+                          schedule=Schedule(2),
+                          on_reselect=lambda r0, s: calls.append(
+                              (r0, int(s.round))))
+    assert calls == [(0, 2), (2, 4), (4, 5)]               # short tail period
+    assert [h["round"] for h in hist] == [0, 1, 2, 3, 4]
+
+
+def test_history_carries_eval_and_scalars_only(ctx):
+    f = ctx
+    prog = wpfed_program(f["apply_fn"], f["opt"], f["fed"])
+    eval_fn = lambda st, d: {"acc": evaluate(f["apply_fn"], st, d)["mean_acc"]}
+    _st, hist = run_rounds(prog, f["state0"], f["data"], rounds=2,
+                           schedule=Schedule(2), eval_fn=eval_fn)
+    for h in hist:
+        assert 0.0 <= h["acc"] <= 1.0
+        assert "neighbor_ids" not in h                     # arrays stay out
+        assert isinstance(h["round"], int)
+
+
+def test_engine_publishes_verifiable_ledger(ctx):
+    """Blockchain wiring end-to-end: one block per reselection, chain
+    verifies, and each block's commitments match the revealed rankings
+    (Eq. 9-10 commit-and-reveal on the host ledger)."""
+    from repro.core.chain import verify_reveal
+    from repro.launch.fed import chain_publisher
+    f = ctx
+    m = f["fed"].num_clients
+    prog = wpfed_program(f["apply_fn"], f["opt"], f["fed"])
+    chain = Blockchain()
+    _st, _hist = run_rounds(prog, f["state0"], f["data"], rounds=4,
+                            schedule=Schedule(2),
+                            on_reselect=chain_publisher(chain, m))
+    assert chain.verify_chain()
+    assert len(chain.blocks) == 3                          # genesis + 2
+    for blk in chain.blocks[1:]:
+        for i, reveal in blk.payload["reveals"].items():
+            assert verify_reveal(
+                blk.payload["announcements"][i]["commit"],
+                np.asarray(reveal, np.int64))
+    # tamper -> detected
+    chain.blocks[1].payload["reveals"]["0"] = [0, 0, 0]
+    assert not chain.verify_chain()
