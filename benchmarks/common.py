@@ -12,7 +12,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -20,8 +20,8 @@ import numpy as np
 
 from repro.configs.paper_models import (FedConfig, PAPER_FED_OPTIMA,
                                         aecg_tcn, mnist_cnn, seeg_tcn)
-from repro.core import (Schedule, evaluate, init_state, make_program,
-                        program_round, run_rounds)
+from repro.core import (Schedule, ThreatModel, evaluate, init_state,
+                        instrument_program, make_program, run_rounds)
 from repro.data import DATASETS
 from repro.models import apply_client_model, init_client_model
 from repro.optim import adam
@@ -74,52 +74,44 @@ def make_fed_program(method: str, ctx):
                         **kw)
 
 
-def make_round(method: str, ctx) -> Callable:
-    """Classic round_fn(state, data) -> (state, metrics) for `method` —
-    the program_round adapter over the same one-place registry."""
-    return program_round(make_fed_program(method, ctx))
-
-
 def run_method(method: str, dataset: str, seed: int, rounds: int = 0,
                fed_overrides: Optional[dict] = None,
-               attack_hook: Optional[Callable] = None,
+               threat: Union[ThreatModel, Callable, None] = None,
                honest_mask=None, reselect_every: int = 1) -> Dict:
-    """Train `method` for `rounds`; returns accuracy trajectory.
+    """Train `method` for `rounds`; returns the accuracy trajectory plus
+    the full per-round scalar history.
 
-    Without an attack hook the rounds run through the round-program
-    engine (core.rounds.run_rounds — per-round evaluation stays inside
-    the compiled segment; reselect_every>1 runs gossip epochs between
-    reselections, DESIGN.md §8). Attack hooks mutate state on the host
-    every round, so that path keeps the per-round Python loop and
-    rejects reselect_every>1 rather than silently running sync.
+    EVERY run — clean or adversarial — goes through the round-program
+    engine (core.rounds.run_rounds): per-round evaluation stays inside
+    the compiled segment and reselect_every>1 runs gossip epochs
+    between reselections (DESIGN.md §8). `threat` is a
+    `core.adversary.ThreatModel` (or a builder `ctx -> ThreatModel`,
+    for threats that need the run's init_fn / client count); attacks
+    are spliced in-graph via `instrument_program`, so adversarial runs
+    compile, scan, and gossip exactly like clean ones — the per-round
+    host attack loop is gone (DESIGN.md §9). Under a threat the
+    in-graph telemetry (attacker_admission_rate, rank_score_*) lands in
+    the history, and evaluation defaults to the honest cohort.
     """
-    if attack_hook is not None and reselect_every != 1:
-        raise ValueError("attack_hook runs the per-round host loop; "
-                         "reselect_every>1 is not supported there")
     ctx = setup(dataset, seed, fed_overrides=fed_overrides)
     rounds = rounds or BENCH_ROUNDS
+    program = make_fed_program(method, ctx)
+    tm = threat(ctx) if callable(threat) else threat
+    if tm is not None:
+        program = instrument_program(program, tm)
+        if honest_mask is None:
+            honest_mask = (~tm.attacker_mask).astype(jnp.float32)
     state = init_state(ctx["apply_fn"], ctx["init_fn"], ctx["opt"],
                        ctx["fed"], jax.random.PRNGKey(seed))
     t0 = time.time()
-    if attack_hook is None:
-        eval_fn = lambda st, d: {"acc": evaluate(
-            ctx["apply_fn"], st, d, honest_mask=honest_mask)["mean_acc"]}
-        state, history = run_rounds(
-            make_fed_program(method, ctx), state, ctx["data"],
-            rounds=rounds, schedule=Schedule(reselect_every),
-            eval_fn=eval_fn)
-        accs = [h["acc"] for h in history]
-    else:
-        round_fn = jax.jit(make_round(method, ctx))
-        accs = []
-        for r in range(rounds):
-            state = attack_hook(state, r, ctx)
-            state, _ = round_fn(state, ctx["data"])
-            ev = evaluate(ctx["apply_fn"], state, ctx["data"],
-                          honest_mask=honest_mask)
-            accs.append(float(ev["mean_acc"]))
+    eval_fn = lambda st, d: {"acc": evaluate(
+        ctx["apply_fn"], st, d, honest_mask=honest_mask)["mean_acc"]}
+    state, history = run_rounds(
+        program, state, ctx["data"], rounds=rounds,
+        schedule=Schedule(reselect_every), eval_fn=eval_fn)
+    accs = [h["acc"] for h in history]
     return {"method": method, "dataset": dataset, "seed": seed,
-            "accs": accs, "final_acc": accs[-1],
+            "accs": accs, "final_acc": accs[-1], "history": history,
             "wall_s": time.time() - t0}
 
 

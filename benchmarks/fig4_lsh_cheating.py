@@ -4,24 +4,44 @@ scale): the rate at which attackers are ADMITTED INTO DISTILLATION by
 honest clients, with vs without §3.5 verification — the quantity whose
 collapse Fig. 4's accuracy curves reflect. Honest-cohort accuracy is
 reported alongside (synthetic-data caveat in EXPERIMENTS.md §Repro).
+
+The attack is an in-graph `core.adversary.ThreatModel` (corrupt params
++ forge codes toward the target, every round from ATTACK_START), so the
+run goes through the round-program engine like every clean method —
+`--reselect-every G` gossips between reselections with the attackers
+still firing inside the compiled segments (DESIGN.md §9). The admission
+rate is the engine's own in-graph telemetry (attacker_admission_rate).
 """
 from __future__ import annotations
 
-import dataclasses
+import argparse
 import json
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import setup
-from repro.core import attacks, evaluate, init_state, make_wpfed_round
+from benchmarks.common import run_method
+from repro.core import resolve_attack, threat_model
 
 TARGET = 0
 ATTACK_START = 3
 
 
-def run(dataset="mnist", seed=0, rounds=8, log=print):
+def _lsh_cheat_threat(ctx, seed):
+    """§4.7 threat: the top half of the pool corrupts its params and
+    republishes the target's LSH code, every round from ATTACK_START."""
+    m = ctx["fed"].num_clients
+    return threat_model(
+        [resolve_attack("corrupt", init_fn=ctx["init_fn"],
+                        start_round=ATTACK_START),
+         resolve_attack("forge_codes", target_id=TARGET,
+                        start_round=ATTACK_START)],
+        jnp.arange(m) >= m // 2,
+        key=jax.random.PRNGKey(seed + 31), name="lsh-cheat")
+
+
+def run(dataset="mnist", seed=0, rounds=8, reselect_every=1, log=print):
     """Both arms use similarity-driven selection (use_rank=False) so the
     §3.5 verification filter is the isolated variable: fully-corrupt
     attackers are ALSO blocked by the rank-score defense (demonstrated
@@ -32,45 +52,27 @@ def run(dataset="mnist", seed=0, rounds=8, log=print):
                              ("without_verification",
                               {"use_rank": False,
                                "lsh_verification": False})):
-        ctx = setup(dataset, seed, fed_overrides=overrides)
-        m = ctx["fed"].num_clients
-        attacker = jnp.arange(m) >= m // 2
-        honest = (~attacker).astype(jnp.float32)
-        state = init_state(ctx["apply_fn"], ctx["init_fn"], ctx["opt"],
-                           ctx["fed"], jax.random.PRNGKey(seed))
-        round_fn = jax.jit(make_wpfed_round(ctx["apply_fn"], ctx["opt"],
-                                            ctx["fed"]))
-        accs, admit = [], []
-        for r in range(rounds):
-            if r >= ATTACK_START:
-                state = attacks.corrupt_params(
-                    state, attacker, ctx["init_fn"],
-                    jax.random.fold_in(jax.random.PRNGKey(seed + 31), r))
-                state = attacks.forge_lsh_codes(state, attacker, TARGET)
-            state, met = round_fn(state, ctx["data"])
-            ev = evaluate(ctx["apply_fn"], state, ctx["data"],
-                          honest_mask=honest)
-            accs.append(float(ev["mean_acc"]))
-            if r >= ATTACK_START:
-                ids = met["neighbor_ids"]                  # (M,N)
-                valid = met["valid_mask"]
-                att_sel = jnp.take(attacker, ids)          # (M,N) bool
-                hon_rows = ~attacker
-                admitted = jnp.sum(att_sel & valid, axis=1) \
-                    / jnp.maximum(jnp.sum(valid, axis=1), 1)
-                admit.append(float(jnp.sum(admitted * hon_rows)
-                                   / jnp.sum(hon_rows)))
-        out[label] = {"honest_accs": accs,
+        res = run_method("wpfed", dataset, seed, rounds=rounds,
+                         fed_overrides=overrides,
+                         threat=lambda ctx: _lsh_cheat_threat(ctx, seed),
+                         reselect_every=reselect_every)
+        admit = [h["attacker_admission_rate"] for h in res["history"]
+                 if h["round"] >= ATTACK_START]
+        out[label] = {"honest_accs": res["accs"],
                       "attacker_admission_rate":
                           float(np.mean(admit)) if admit else 0.0}
         log(f"fig4 {label}: attacker admission "
             f"{out[label]['attacker_admission_rate']:.3f}, "
-            f"final honest acc {accs[-1]:.4f}")
+            f"final honest acc {res['accs'][-1]:.4f}")
     return out
 
 
-def main():
-    out = run()
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--reselect-every", type=int, default=1,
+                    help="gossip period G (1 = the paper's sync rounds)")
+    args = ap.parse_args(argv)
+    out = run(reselect_every=args.reselect_every)
     print(json.dumps(out, indent=1))
     return out
 

@@ -4,64 +4,65 @@ Mechanism metrics: (a) crowd-sourced ranking score of poisoned vs honest
 clients — WPFed's selection signal; (b) poisoned-client admission rate
 into honest clients' distillation — WPFed vs ProxyFL (no selection);
 plus honest-cohort accuracy (synthetic-data caveat in EXPERIMENTS.md).
+
+The poison is an in-graph `core.adversary.ThreatModel` ("poison" =
+periodic re-initialization, §4.8), so both methods run through the
+round-program engine — `--reselect-every G` poisons inside the gossip
+scan too — and the rank-score / admission metrics are the engine's own
+in-graph telemetry (DESIGN.md §9).
 """
 from __future__ import annotations
 
+import argparse
 import json
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import make_round, setup
-from repro.core import attacks, evaluate, init_state, make_wpfed_round
+from benchmarks.common import run_method
+from repro.core import attacker_mask_tail, resolve_attack, threat_model
 
 ATTACK_START = 3
 EVERY = 2
 
 
-def run(dataset="mnist", seed=0, rounds=8, fracs=(0.25, 0.5), log=print):
+def _poison_threat(ctx, frac, seed):
+    m = ctx["fed"].num_clients
+    return threat_model(
+        [resolve_attack("poison", init_fn=ctx["init_fn"],
+                        start_round=ATTACK_START, every=EVERY)],
+        attacker_mask_tail(m, frac),
+        key=jax.random.PRNGKey(seed + 77),
+        name=f"poison{int(frac * 100)}")
+
+
+def run(dataset="mnist", seed=0, rounds=8, fracs=(0.25, 0.5),
+        reselect_every=1, log=print):
     out = {}
     for frac in fracs:
         for method in ("wpfed", "proxyfl"):
-            ctx = setup(dataset, seed)
-            m = ctx["fed"].num_clients
-            n_bad = int(m * frac)
-            attacker = jnp.arange(m) >= (m - n_bad)
-            honest = (~attacker).astype(jnp.float32)
-            state = init_state(ctx["apply_fn"], ctx["init_fn"], ctx["opt"],
-                               ctx["fed"], jax.random.PRNGKey(seed))
-            round_fn = jax.jit(make_round(method, ctx))
-            accs, scores_h, scores_b, admit = [], [], [], []
-            for r in range(rounds):
-                if r >= ATTACK_START and (r - ATTACK_START) % EVERY == 0:
-                    state = attacks.corrupt_params(
-                        state, attacker, ctx["init_fn"],
-                        jax.random.fold_in(jax.random.PRNGKey(seed + 77), r))
-                state, met = round_fn(state, ctx["data"])
-                accs.append(float(evaluate(ctx["apply_fn"], state,
-                                           ctx["data"],
-                                           honest_mask=honest)["mean_acc"]))
-                if method == "wpfed" and r > ATTACK_START:
-                    s = met["ranking_scores"]
-                    scores_h.append(float(jnp.sum(s * honest)
-                                          / jnp.sum(honest)))
-                    scores_b.append(float(jnp.sum(s * attacker)
-                                          / jnp.maximum(jnp.sum(attacker),
-                                                        1)))
-                    ids, valid = met["neighbor_ids"], met["valid_mask"]
-                    att_sel = jnp.take(attacker, ids)
-                    adm = jnp.sum(att_sel & valid, axis=1) \
-                        / jnp.maximum(jnp.sum(valid, axis=1), 1)
-                    admit.append(float(jnp.sum(adm * honest)
-                                       / jnp.sum(honest)))
+            res = run_method(
+                method, dataset, seed, rounds=rounds,
+                threat=lambda ctx: _poison_threat(ctx, frac, seed),
+                reselect_every=reselect_every)
+            accs = res["accs"]
             key = f"{method}@{int(frac * 100)}%"
             out[key] = {"honest_accs": accs}
             if method == "wpfed":
+                # in-graph telemetry: rank scores + admission, averaged
+                # over post-warm-up rounds (selection carries signal)
+                post = [h for h in res["history"]
+                        if h["round"] > ATTACK_START]
+
+                def post_mean(k):
+                    return float(np.mean([h[k] for h in post])) \
+                        if post else 0.0
+
                 out[key].update({
-                    "rank_score_honest": float(np.mean(scores_h)),
-                    "rank_score_poisoned": float(np.mean(scores_b)),
-                    "poisoned_admission_rate": float(np.mean(admit)),
+                    "rank_score_honest": post_mean("rank_score_honest"),
+                    "rank_score_poisoned": post_mean("rank_score_attacker"),
+                    "poisoned_admission_rate":
+                        post_mean("attacker_admission_rate"),
                 })
                 log(f"fig5 {key}: rank honest "
                     f"{out[key]['rank_score_honest']:.3f} vs poisoned "
@@ -74,8 +75,12 @@ def run(dataset="mnist", seed=0, rounds=8, fracs=(0.25, 0.5), log=print):
     return out
 
 
-def main():
-    out = run()
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--reselect-every", type=int, default=1,
+                    help="gossip period G (1 = the paper's sync rounds)")
+    args = ap.parse_args(argv)
+    out = run(reselect_every=args.reselect_every)
     print(json.dumps(out, indent=1))
     return out
 

@@ -1,27 +1,36 @@
-"""Attack-resilience demo (paper §4.7-4.8): LSH-cheating and poison
-attacks against WPFed, with and without the trust-free defenses.
+"""Attack-resilience demo (paper §4.7-4.8): the LSH-cheating attack
+against WPFed, with and without the trust-free defenses — expressed as
+an in-graph `core.adversary.ThreatModel` and run through the
+round-program engine (DESIGN.md §8-§9), so the adversarial run compiles
+into the same segments as a clean one and `--reselect-every G` gossips
+between reselections with the attack still firing inside the scan.
 
     PYTHONPATH=src python examples/attack_resilience.py
+    PYTHONPATH=src python examples/attack_resilience.py \
+        --clients 6 --rounds 3 --per-client 48   # reduced (CI smoke)
 """
-import dataclasses
+import argparse
 import functools
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.paper_models import FedConfig, mnist_cnn
-from repro.core import attacks, evaluate, init_state, make_wpfed_round
+from repro.core import (Schedule, evaluate, init_state, instrument_program,
+                        resolve_attack, run_rounds, threat_model,
+                        wpfed_program)
 from repro.data import make_mnist_federated
 from repro.models import apply_client_model, init_client_model
 from repro.optim import adam
 
-M, ROUNDS, ATTACK_AT = 8, 6, 2
 
-
-def run(lsh_verification: bool):
-    fed = FedConfig(num_clients=M, num_neighbors=4, top_k=3, local_steps=2,
-                    lsh_bits=128, lsh_verification=lsh_verification)
-    ds = make_mnist_federated(num_clients=M, per_client=100,
+def run(lsh_verification: bool, *, clients=8, rounds=6, attack_at=2,
+        per_client=100, reselect_every=1):
+    n_nb = min(4, clients - 1)
+    fed = FedConfig(num_clients=clients, num_neighbors=n_nb,
+                    top_k=max(2, n_nb - 1), local_steps=2, lsh_bits=128,
+                    lsh_verification=lsh_verification)
+    ds = make_mnist_federated(num_clients=clients, per_client=per_client,
                               ref_per_client=16)
     data = {k: jnp.asarray(v) for k, v in ds.stacked().items()}
     mcfg = mnist_cnn()
@@ -29,29 +38,43 @@ def run(lsh_verification: bool):
     init_fn = lambda k: init_client_model(mcfg, k)
     opt = adam(fed.lr)
     state = init_state(apply_fn, init_fn, opt, fed, jax.random.PRNGKey(0))
-    round_fn = jax.jit(make_wpfed_round(apply_fn, opt, fed))
-    attacker = jnp.arange(M) >= M // 2          # half the pool, forging
-    honest = (~attacker).astype(jnp.float32)
-    accs = []
-    for r in range(ROUNDS):
-        if r >= ATTACK_AT:
-            state = attacks.corrupt_params(
-                state, attacker, init_fn,
-                jax.random.fold_in(jax.random.PRNGKey(9), r))
-            state = attacks.forge_lsh_codes(state, attacker, target_id=0)
-        state, m = round_fn(state, data)
-        ev = evaluate(apply_fn, state, data, honest_mask=honest)
-        accs.append(float(ev["mean_acc"]))
-    return accs
+
+    # half the pool corrupts its params and forges the target's LSH
+    # code, every round from attack_at — scheduled in-graph
+    tm = threat_model(
+        [resolve_attack("corrupt", init_fn=init_fn, start_round=attack_at),
+         resolve_attack("forge_codes", target_id=0, start_round=attack_at)],
+        jnp.arange(clients) >= clients // 2,
+        key=jax.random.PRNGKey(9), name="lsh-cheat")
+    program = instrument_program(wpfed_program(apply_fn, opt, fed), tm)
+    honest = (~tm.attacker_mask).astype(jnp.float32)
+    eval_fn = lambda st, d: {"acc": evaluate(
+        apply_fn, st, d, honest_mask=honest)["mean_acc"]}
+    _state, history = run_rounds(program, state, data, rounds=rounds,
+                                 schedule=Schedule(reselect_every),
+                                 eval_fn=eval_fn)
+    return [h["acc"] for h in history]
 
 
-def main():
-    print("LSH-cheating attack from round", ATTACK_AT)
-    with_v = run(lsh_verification=True)
-    without_v = run(lsh_verification=False)
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--rounds", type=int, default=6)
+    ap.add_argument("--attack-at", type=int, default=2)
+    ap.add_argument("--per-client", type=int, default=100)
+    ap.add_argument("--reselect-every", type=int, default=1,
+                    help="gossip period G (attacks fire inside the "
+                         "compiled gossip scan too)")
+    args = ap.parse_args(argv)
+    kw = dict(clients=args.clients, rounds=args.rounds,
+              attack_at=args.attack_at, per_client=args.per_client,
+              reselect_every=args.reselect_every)
+    print("LSH-cheating attack from round", args.attack_at)
+    with_v = run(lsh_verification=True, **kw)
+    without_v = run(lsh_verification=False, **kw)
     print(f"{'round':>5s} {'WPFed (verified)':>18s} {'no verification':>16s}")
     for r, (a, b) in enumerate(zip(with_v, without_v)):
-        mark = "  <- attack on" if r >= ATTACK_AT else ""
+        mark = "  <- attack on" if r >= args.attack_at else ""
         print(f"{r:5d} {a:18.4f} {b:16.4f}{mark}")
     print(f"\nfinal honest-client accuracy: verified={with_v[-1]:.4f} "
           f"vs unverified={without_v[-1]:.4f}")

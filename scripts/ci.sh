@@ -1,8 +1,11 @@
 #!/usr/bin/env bash
 # One-command verify recipe: tier-1 tests + kernel micro-benchmark
 # (smoke mode — covers LSH projection, Hamming, fused selection, the
-# fused all-in-one exchange AND the round-program engine, which emits
-# benchmarks/BENCH_rounds.json). Usage: scripts/ci.sh [extra pytest args]
+# fused all-in-one exchange, the round-program engine and the adversary
+# instrumentation, emitting benchmarks/BENCH_rounds.json +
+# BENCH_adversary.json) + a reduced-scale run of the attack-resilience
+# example (the in-graph ThreatModel path end-to-end, attacks firing
+# inside a gossip segment). Usage: scripts/ci.sh [extra pytest args]
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -12,5 +15,9 @@ python -m pytest -x -q "$@"
 
 echo "== kernel micro-benchmark (smoke) =="
 python benchmarks/kernel_micro.py --smoke
+
+echo "== attack-resilience example (smoke) =="
+python examples/attack_resilience.py --clients 6 --rounds 3 \
+    --per-client 48 --reselect-every 3
 
 echo "CI OK"

@@ -28,3 +28,13 @@ from repro.core.protocol import (  # noqa: F401
     update_phase,
     wpfed_program,
 )
+from repro.core.adversary import (  # noqa: F401
+    Attack,
+    ThreatModel,
+    apply_attacks,
+    attacker_mask_tail,
+    instrument_program,
+    resolve_attack,
+    resolve_threat,
+    threat_model,
+)

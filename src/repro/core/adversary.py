@@ -1,0 +1,266 @@
+"""First-class adversary API: typed, in-graph threat models composed
+with the round-program engine (DESIGN.md §9).
+
+The paper's robustness claims (§4.7 LSH-cheating, §4.8 poison) are
+claims about (method x schedule x threat-model) combinations, so the
+adversary is a subsystem like selection/exchange/rounds rather than a
+per-experiment host loop:
+
+  Attack        one scheduled behaviour — a pure jittable transform
+                `(state, attacker_mask, round_idx, key) -> state` plus
+                `start_round`/`every` gating. The gate is evaluated
+                in-graph (`attacks.attack_active` under `lax.cond`),
+                never with a host `if`, so attacks fire correctly for
+                traced round indices — including the gossip epochs that
+                run under `make_segment_fn`'s `lax.scan`.
+  ThreatModel   a named attacker mask + a list of Attacks + a base PRNG
+                key. Per-attack, per-round keys derive as
+                `attack_key(key, attack_index, round_idx)`.
+  resolve_attack  the one-place name/argument validator over the
+                `core.attacks` primitives (the `repro.core.backends`
+                pattern): "forge_codes", "corrupt", "poison" (§4.8
+                defaults start_round=50, every=3), "lie_in_reveal".
+  instrument_program  splices a ThreatModel into BOTH round bodies of a
+                `core.rounds.RoundProgram` — attacks mutate state
+                before each global round AND each gossip epoch, exactly
+                where the legacy host hook ran — and augments the
+                round metrics with in-graph threat telemetry
+                (attacker admission rate, honest-vs-attacker ranking
+                scores) wherever the base metrics expose the needed
+                arrays. The instrumented program is still a program:
+                it compiles into `make_segment_fn` segments, runs under
+                sharding, and goes through `run_rounds` like every
+                clean method.
+
+`Schedule(1)` through an instrumented program is bit-exact with the
+legacy per-round host loop (eager attack hook + jitted round) — pinned
+in tests/test_adversary.py against a verbatim copy of that loop.
+
+Module-level imports stay acyclic: `core.rounds` imports no siblings,
+and `core.attacks` pulls only `core.protocol` (for FedState typing).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import attacks as _attacks
+from repro.core.rounds import RoundProgram
+
+
+class Attack(NamedTuple):
+    """One scheduled adversarial behaviour."""
+    name: str
+    transform: Callable  # (state, attacker_mask, round_idx, key) -> state
+    start_round: int = 0
+    every: int = 1
+
+
+class ThreatModel(NamedTuple):
+    """Who attacks (mask), how (attacks), and with what randomness."""
+    name: str
+    attacker_mask: jnp.ndarray   # (M,) bool
+    attacks: Tuple[Attack, ...]
+    key: jnp.ndarray             # base PRNG key (see attack_key)
+
+
+ATTACKS = ("forge_codes", "corrupt", "poison", "lie_in_reveal")
+_NEEDS_INIT = ("corrupt", "poison")
+_DEFAULT_SCHEDULE = {"poison": (50, 3)}   # §4.8: warm-up 50, re-init /3
+
+
+def resolve_attack(name: str, *, start_round: Optional[int] = None,
+                   every: Optional[int] = None, init_fn=None,
+                   target_id: Optional[int] = None) -> Attack:
+    """One-place attack construction + validation (the
+    `repro.core.backends.resolve` pattern — benchmarks, examples and
+    the launcher all build attacks here, so the name/argument checking
+    lives in exactly one spot).
+
+      "forge_codes"    §4.7 LSH forgery toward `target_id` (required)
+      "corrupt"        replace attacker params with fresh re-inits
+                       (`init_fn` required)
+      "poison"         "corrupt" with the §4.8 schedule defaults
+                       (start_round=50, every=3) unless overridden
+      "lie_in_reveal"  §3.6 reveal that differs from the commitment
+    """
+    if name not in ATTACKS:
+        raise ValueError(
+            f"unknown attack: {name!r} (expected one of {ATTACKS})")
+    d_start, d_every = _DEFAULT_SCHEDULE.get(name, (0, 1))
+    start_round = d_start if start_round is None else start_round
+    every = d_every if every is None else every
+    if start_round < 0:
+        raise ValueError(f"start_round must be >= 0, got {start_round}")
+    if every < 1:
+        raise ValueError(f"every must be >= 1, got {every}")
+    if name in _NEEDS_INIT and init_fn is None:
+        raise ValueError(f"attack {name!r} requires init_fn=")
+    if name == "forge_codes" and target_id is None:
+        raise ValueError("attack 'forge_codes' requires target_id=")
+
+    if name == "forge_codes":
+        def transform(state, mask, round_idx, key):
+            return _attacks.forge_lsh_codes(state, mask, target_id)
+    elif name in _NEEDS_INIT:
+        def transform(state, mask, round_idx, key):
+            return _attacks.corrupt_params(state, mask, init_fn, key)
+    else:  # lie_in_reveal
+        def transform(state, mask, round_idx, key):
+            return _attacks.lie_in_reveal(state, mask)
+    return Attack(name, transform, start_round, every)
+
+
+def attacker_mask_tail(num_clients: int, frac: float) -> jnp.ndarray:
+    """The experiments' convention (Fig. 4/5): the LAST
+    int(M * frac) clients are the attackers."""
+    n_bad = int(num_clients * frac)
+    if not 0 < n_bad < num_clients:
+        raise ValueError(
+            f"attacker_frac={frac} yields {n_bad} attackers out of "
+            f"{num_clients} clients (need 0 < attackers < clients)")
+    return jnp.arange(num_clients) >= (num_clients - n_bad)
+
+
+def threat_model(attack_list: Sequence[Attack], attacker_mask, *,
+                 key=None, name: str = "threat") -> ThreatModel:
+    """Validated ThreatModel constructor."""
+    atks = tuple(attack_list)
+    if not atks:
+        raise ValueError("a ThreatModel needs at least one Attack")
+    for a in atks:
+        if not isinstance(a, Attack):
+            raise TypeError(f"expected Attack, got {type(a).__name__} "
+                            "(build attacks via resolve_attack)")
+    attacker_mask = jnp.asarray(attacker_mask)
+    if attacker_mask.ndim != 1 or \
+            not jnp.issubdtype(attacker_mask.dtype, jnp.bool_):
+        raise ValueError("attacker_mask must be a 1-D bool mask, got "
+                         f"{attacker_mask.dtype}{attacker_mask.shape}")
+    key = jax.random.PRNGKey(0) if key is None else key
+    return ThreatModel(name, attacker_mask, atks, key)
+
+
+def attack_key(key, attack_index, round_idx):
+    """Per-(attack, round) key schedule: fold the attack's index, then
+    the round, into the ThreatModel's base key."""
+    return jax.random.fold_in(jax.random.fold_in(key, attack_index),
+                              round_idx)
+
+
+def apply_attacks(state, tm: ThreatModel, round_idx=None):
+    """Apply every scheduled attack to `state` in ThreatModel order —
+    fully in-graph: each attack runs under `lax.cond` on its
+    `attack_active` gate, so the composition jits, scans, and shards.
+    `round_idx` defaults to `state.round` (traced inside segments)."""
+    r = state.round if round_idx is None else round_idx
+    for i, atk in enumerate(tm.attacks):
+        k = attack_key(tm.key, i, r)
+        state = jax.lax.cond(
+            _attacks.attack_active(r, atk.start_round, atk.every),
+            lambda s, a=atk, kk=k: a.transform(s, tm.attacker_mask, r, kk),
+            lambda s: s, state)
+    return state
+
+
+def _threat_metrics(metrics, attacker_mask):
+    """In-graph threat telemetry derived from whatever per-round arrays
+    the base program already reports (WPFed's `_round_metrics` exposes
+    ranking_scores / neighbor_ids / valid_mask; baselines without a
+    selection stage simply gain nothing):
+
+      rank_score_honest / rank_score_attacker   Eq. 7 crowd scores by
+          cohort — Fig. 5's "the crowd down-ranks poisoned clients".
+      attacker_admission_rate   fraction of honest clients' VALID
+          distillation slots held by attackers — Fig. 4/5's admission
+          metric, the quantity the §3.5 filter collapses.
+    """
+    out = dict(metrics)
+    honest = ~attacker_mask
+    if "ranking_scores" in metrics:
+        s = metrics["ranking_scores"]
+        hf = honest.astype(s.dtype)
+        af = attacker_mask.astype(s.dtype)
+        out["rank_score_honest"] = (jnp.sum(s * hf)
+                                    / jnp.maximum(jnp.sum(hf), 1))
+        out["rank_score_attacker"] = (jnp.sum(s * af)
+                                      / jnp.maximum(jnp.sum(af), 1))
+    if "neighbor_ids" in metrics and "valid_mask" in metrics:
+        ids, valid = metrics["neighbor_ids"], metrics["valid_mask"]
+        att_sel = jnp.take(attacker_mask, ids)              # (M, N) bool
+        admitted = (jnp.sum((att_sel & valid).astype(jnp.float32), axis=1)
+                    / jnp.maximum(
+                        jnp.sum(valid.astype(jnp.float32), axis=1), 1.0))
+        hf = honest.astype(jnp.float32)
+        out["attacker_admission_rate"] = (
+            jnp.sum(admitted * hf) / jnp.maximum(jnp.sum(hf), 1.0))
+    return out
+
+
+def instrument_program(program: RoundProgram,
+                       tm: ThreatModel) -> RoundProgram:
+    """Splice a ThreatModel into a RoundProgram: attacks mutate state
+    immediately before each global round AND each gossip epoch (the
+    same point where the legacy host hook ran), and the per-round
+    metrics gain the in-graph threat telemetry. The result is an
+    ordinary program — `make_segment_fn` compiles it (gossip attacks
+    run under the segment's `lax.scan`), `run_rounds` drives it, and
+    the dryrun lowers it under sharding like any clean method."""
+
+    def global_round(state, data):
+        state = apply_attacks(state, tm)
+        state, cache, metrics = program.global_round(state, data)
+        return state, cache, _threat_metrics(metrics, tm.attacker_mask)
+
+    gossip_round = None
+    if program.gossip_round is not None:
+        def gossip_round(state, data, cache):
+            state = apply_attacks(state, tm)
+            state, cache, metrics = program.gossip_round(state, data, cache)
+            return state, cache, _threat_metrics(metrics, tm.attacker_mask)
+
+    return RoundProgram(f"{program.name}+{tm.name}", global_round,
+                        gossip_round)
+
+
+# ---------------------------------------------------------------------------
+# named threat-model presets (CLI / examples / benchmarks)
+# ---------------------------------------------------------------------------
+THREATS = ("lsh_cheat", "poison", "lie_in_reveal")
+
+
+def resolve_threat(name: str, *, num_clients: int, attacker_frac: float = 0.5,
+                   init_fn=None, key=None, start_round: Optional[int] = None,
+                   every: Optional[int] = None,
+                   target_id: int = 0) -> ThreatModel:
+    """The paper's named threat models, in one validated place
+    (launch/fed.py `--attack`, examples, benchmarks):
+
+      "lsh_cheat"      §4.7 — corrupt params + forge LSH codes toward
+                       `target_id`, every round from `start_round`
+      "poison"         §4.8 — periodic re-initialization (registry
+                       defaults start_round=50, every=3)
+      "lie_in_reveal"  §3.6 — reveal a ranking differing from the
+                       commitment
+
+    Attackers are the last int(M * attacker_frac) clients
+    (`attacker_mask_tail`).
+    """
+    if name not in THREATS:
+        raise ValueError(
+            f"unknown threat model: {name!r} (expected one of {THREATS})")
+    mask = attacker_mask_tail(num_clients, attacker_frac)
+    if name == "lsh_cheat":
+        atks = [resolve_attack("corrupt", init_fn=init_fn,
+                               start_round=start_round, every=every),
+                resolve_attack("forge_codes", target_id=target_id,
+                               start_round=start_round, every=every)]
+    elif name == "poison":
+        atks = [resolve_attack("poison", init_fn=init_fn,
+                               start_round=start_round, every=every)]
+    else:
+        atks = [resolve_attack("lie_in_reveal", start_round=start_round,
+                               every=every)]
+    return threat_model(atks, mask, key=key, name=name)

@@ -1,4 +1,8 @@
-"""Adversarial behaviours from the paper's robustness studies.
+"""Adversarial primitives from the paper's robustness studies — pure,
+jittable state transforms. The schedulable, composable layer on top
+(`ThreatModel` / `Attack` / `instrument_program`) lives in
+`core.adversary` (DESIGN.md §9); these functions are the registry
+entries behind `adversary.resolve_attack`.
 
 §4.7 LSH-cheating attack: attackers controlling half of a target's
 potential neighbors forge their published LSH codes to match the
@@ -15,12 +19,19 @@ different from the one it committed to.
 """
 from __future__ import annotations
 
-from typing import Callable
-
 import jax
 import jax.numpy as jnp
 
 from repro.core.protocol import FedState
+
+
+def attack_active(round_idx, start_round: int = 0, every: int = 1):
+    """Scan-safe schedule predicate: active from `start_round`, every
+    `every` rounds. Works with traced round indices (inside `jit` /
+    `lax.scan` segments) as well as Python ints — gate with `lax.cond`
+    or `jnp.where`, never a host `if`."""
+    r = jnp.asarray(round_idx)
+    return (r >= start_round) & (jnp.mod(r - start_round, every) == 0)
 
 
 def forge_lsh_codes(state: FedState, attacker_mask, target_id: int
@@ -35,8 +46,7 @@ def forge_lsh_codes(state: FedState, attacker_mask, target_id: int
 def corrupt_params(state: FedState, attacker_mask, init_fn, key) -> FedState:
     """Replace attackers' params with fresh random re-initializations."""
     m = attacker_mask.shape[0]
-    keys = jnp.stack(list(jax.random.split(key, m)))
-    fresh = jax.vmap(init_fn)(keys)
+    fresh = jax.vmap(init_fn)(jax.random.split(key, m))
 
     def mix(old, new):
         mask = attacker_mask.reshape((m,) + (1,) * (old.ndim - 1))
@@ -45,21 +55,22 @@ def corrupt_params(state: FedState, attacker_mask, init_fn, key) -> FedState:
     return state._replace(params=jax.tree.map(mix, state.params, fresh))
 
 
-def poison_step(state: FedState, attacker_mask, init_fn, key, round_idx: int,
+def poison_step(state: FedState, attacker_mask, init_fn, key, round_idx,
                 *, start_round: int = 50, every: int = 3) -> FedState:
-    """§4.8: periodic re-initialization after warm-up."""
-    if round_idx >= start_round and (round_idx - start_round) % every == 0:
-        return corrupt_params(state, attacker_mask, init_fn, key)
-    return state
+    """§4.8: periodic re-initialization after warm-up. Gated with
+    `lax.cond` on `attack_active` so it stays correct when `round_idx`
+    is traced (a host `if` silently mis-gates under `jit`/`scan`)."""
+    return jax.lax.cond(
+        attack_active(round_idx, start_round, every),
+        lambda s: corrupt_params(s, attacker_mask, init_fn, key),
+        lambda s: s, state)
 
 
-def lie_in_reveal(state: FedState, liar_mask, key=None) -> FedState:
+def lie_in_reveal(state: FedState, liar_mask) -> FedState:
     """Reveal a ranking that GUARANTEED differs from the committed one —
     rotate the order and perturb the top entry (a random shuffle can be
     the identity with probability 1/n!, which would not be a lie). The
     §3.6 check must flag these reporters."""
-    del key
-    m, n = state.rankings.shape
     lied = jnp.roll(state.rankings, 1, axis=1)
     lied = lied.at[:, 0].add(1)          # differs even for width-1 rankings
     new = jnp.where(liar_mask[:, None], lied, state.rankings)

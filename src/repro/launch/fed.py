@@ -25,8 +25,10 @@ import numpy as np
 
 from repro.configs.paper_models import (FedConfig, PAPER_FED_OPTIMA,
                                         aecg_tcn, mnist_cnn, seeg_tcn)
-from repro.core import (evaluate, init_state, make_segment_fn,
-                        resolve_schedule, run_rounds, wpfed_program)
+from repro.core import (evaluate, init_state, instrument_program,
+                        make_segment_fn, resolve_schedule, resolve_threat,
+                        run_rounds, wpfed_program)
+from repro.core.adversary import THREATS
 from repro.core.chain import Blockchain, lsh_code_hex, sha256_commit
 from repro.data import DATASETS
 from repro.models import apply_client_model, init_client_model
@@ -59,14 +61,19 @@ def run_federation(dataset: str = "mnist", rounds: int = 10,
                    num_clients: int = 0, seed: int = 0, fed: FedConfig = None,
                    backend: str = "auto", ref_mode: str = "personal",
                    schedule: str = "sync", reselect_every: int = 0,
-                   log=print):
+                   attack: str = "none", attack_frac: float = 0.5,
+                   attack_start: int = -1, log=print):
     """`backend` drives BOTH kernel-backed subsystems (selection and
     exchange — one flag, resolved by repro.core.backends.resolve).
     An explicit `fed` config wins outright: backend/ref_mode apply only
     to the default-constructed config (asserted, not silently dropped).
-    `schedule`/`reselect_every` resolve via core.rounds.resolve_schedule.
-    Publishes every reselection to a host `Blockchain` and verifies the
-    chain before returning (state, history).
+    `schedule`/`reselect_every` resolve via core.rounds.resolve_schedule;
+    `attack` resolves via core.adversary.resolve_threat and instruments
+    the program in-graph (DESIGN.md §9) — evaluation then reports the
+    honest cohort. `attack_start=-1` keeps the threat's registry
+    defaults (e.g. the §4.8 poison warm-up). Publishes every reselection
+    to a host `Blockchain` and verifies the chain before returning
+    (state, history).
     """
     if fed is not None and (backend != "auto" or ref_mode != "personal"):
         raise ValueError("pass backend/ref_mode inside the explicit "
@@ -86,11 +93,20 @@ def run_federation(dataset: str = "mnist", rounds: int = 10,
     opt = adam(fed.lr)
     data = {k: jnp.asarray(v) for k, v in ds.stacked().items()}
     state = init_state(apply_fn, init_fn, opt, fed, jax.random.PRNGKey(seed))
+    program = wpfed_program(apply_fn, opt, fed)
+    honest_mask = None
+    if attack != "none":
+        tm = resolve_threat(
+            attack, num_clients=fed.num_clients, attacker_frac=attack_frac,
+            init_fn=init_fn, key=jax.random.PRNGKey(seed + 31),
+            start_round=None if attack_start < 0 else attack_start)
+        program = instrument_program(program, tm)
+        honest_mask = (~tm.attacker_mask).astype(jnp.float32)
     chain = Blockchain()
     state, history = run_rounds(
-        wpfed_program(apply_fn, opt, fed), state, data, rounds=rounds,
-        schedule=sched,
-        eval_fn=lambda st, d: {"acc": evaluate(apply_fn, st, d)["mean_acc"]},
+        program, state, data, rounds=rounds, schedule=sched,
+        eval_fn=lambda st, d: {"acc": evaluate(
+            apply_fn, st, d, honest_mask=honest_mask)["mean_acc"]},
         on_reselect=chain_publisher(chain, fed.num_clients), log=log)
     assert chain.verify_chain(), "host ledger integrity violated"
     return state, history
@@ -98,7 +114,8 @@ def run_federation(dataset: str = "mnist", rounds: int = 10,
 
 def dryrun_fed_round(num_clients: int = 256, arch: str = "phi3-medium-14b",
                      backend: str = "kernel", ref_mode: str = "personal",
-                     reselect_every: int = 1):
+                     reselect_every: int = 1, attack: str = "none",
+                     attack_frac: float = 0.5, attack_start: int = -1):
     """Beyond-paper: lower one WPFed reselection period with
     REDUCED-transformer clients sharded over the production mesh's data
     axis — proves the protocol itself scales out (the paper simulated
@@ -108,7 +125,10 @@ def dryrun_fed_round(num_clients: int = 256, arch: str = "phi3-medium-14b",
     M-forward shared-reference exchange instead of the M*N personal
     one (DESIGN.md §7). `reselect_every=G` lowers the full segment —
     one global round plus G-1 gossip epochs under lax.scan
-    (DESIGN.md §8).
+    (DESIGN.md §8). `attack` instruments the program with an in-graph
+    ThreatModel before lowering (DESIGN.md §9) — e.g. a 256-client
+    poisoned segment, with the lax.cond-gated re-init of the attacker
+    cohort compiled into the sharded round.
 
     Must be called in a fresh process with XLA_FLAGS set (see dryrun.py).
     """
@@ -130,8 +150,15 @@ def dryrun_fed_round(num_clients: int = 256, arch: str = "phi3-medium-14b",
 
     init_fn = functools.partial(init_params, cfg, dtype=jnp.bfloat16)
     opt = adam(fed.lr)
-    segment_fn = make_segment_fn(wpfed_program(apply_fn, opt, fed),
-                                 reselect_every)
+    program = wpfed_program(apply_fn, opt, fed)
+    if attack != "none":
+        # the lowering traces BOTH lax.cond branches, so any
+        # attack_start exercises the full attacked graph
+        program = instrument_program(program, resolve_threat(
+            attack, num_clients=num_clients, attacker_frac=attack_frac,
+            init_fn=init_fn, key=jax.random.PRNGKey(1),
+            start_round=None if attack_start < 0 else attack_start))
+    segment_fn = make_segment_fn(program, reselect_every)
 
     m, r, s = num_clients, 8, 32
     sds = jax.ShapeDtypeStruct
@@ -168,6 +195,7 @@ def dryrun_fed_round(num_clients: int = 256, arch: str = "phi3-medium-14b",
         "client_arch": cfg.name,
         "ref_mode": ref_mode,
         "reselect_every": reselect_every,
+        "attack": attack,
         "mesh": "16x16",
         "flops_per_device": float(cost.get("flops", 0)),
         "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
@@ -201,6 +229,16 @@ def main(argv=None):
                          "in between (DESIGN.md §8)")
     ap.add_argument("--reselect-every", type=int, default=0,
                     help="gossip period G (0 = schedule default)")
+    ap.add_argument("--attack", default="none",
+                    choices=("none",) + THREATS,
+                    help="in-graph threat model instrumenting the run "
+                         "(core.adversary.resolve_threat, DESIGN.md §9)")
+    ap.add_argument("--attack-frac", type=float, default=0.5,
+                    help="fraction of clients that are attackers "
+                         "(the tail of the client axis)")
+    ap.add_argument("--attack-start", type=int, default=-1,
+                    help="first attacked round (-1 = the threat's "
+                         "registry default, e.g. poison's §4.8 warm-up)")
     args = ap.parse_args(argv)
     if args.dryrun:
         import os
@@ -212,14 +250,19 @@ def main(argv=None):
                          backend="kernel" if args.backend == "auto"
                          else args.backend,
                          ref_mode=args.ref_mode,
-                         reselect_every=sched.reselect_every)
+                         reselect_every=sched.reselect_every,
+                         attack=args.attack, attack_frac=args.attack_frac,
+                         attack_start=args.attack_start)
         return
     _, history = run_federation(args.dataset, args.rounds,
                                 num_clients=args.clients, seed=args.seed,
                                 backend=args.backend,
                                 ref_mode=args.ref_mode,
                                 schedule=args.schedule,
-                                reselect_every=args.reselect_every)
+                                reselect_every=args.reselect_every,
+                                attack=args.attack,
+                                attack_frac=args.attack_frac,
+                                attack_start=args.attack_start)
     print(json.dumps(history[-3:], indent=1))
 
 

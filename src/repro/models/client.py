@@ -8,6 +8,8 @@ train tens of client replicas inside `vmap`.
 """
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
 
@@ -99,8 +101,10 @@ def _apply_tcn(cfg: ClientModelConfig, p, x):
 # MLP (used in fast unit tests)
 # ---------------------------------------------------------------------------
 def _init_mlp(cfg: ClientModelConfig, key, dtype):
-    dims = (int(jnp.prod(jnp.array(cfg.input_shape))),
-            *cfg.hidden, cfg.num_classes)
+    # static config product stays in Python: routing it through jnp
+    # makes init_fn un-jittable (init now also runs inside compiled
+    # attack transforms — core.adversary)
+    dims = (math.prod(cfg.input_shape), *cfg.hidden, cfg.num_classes)
     ks = split_keys(key, len(dims))
     return {"w": [dense_init(ks[i], (dims[i], dims[i + 1]), dtype)
                   for i in range(len(dims) - 1)],

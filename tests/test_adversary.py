@@ -1,0 +1,253 @@
+"""First-class adversary API (core.adversary, DESIGN.md §9).
+
+The load-bearing guarantees:
+  * The in-graph attack path (instrument_program + run_rounds at
+    Schedule(1)) is BIT-EXACT with the legacy per-round host loop —
+    eager attack hook before each jitted round, the pre-PR4
+    benchmarks.common.run_method composition, copied verbatim below —
+    for WPFed and ProxyFL.
+  * Attack scheduling (`start_round`/`every`) is scan-safe: attacks
+    fire at the right rounds INSIDE a reselect_every=4 gossip segment,
+    where the round index is a lax.scan tracer.
+  * resolve_attack / threat_model / resolve_threat validate in one
+    place (the repro.core.backends pattern).
+  * §3.6 end-to-end: lie_in_reveal reporters are flagged by the
+    engine's own per-round metrics.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (Schedule, attacker_mask_tail, attacks, evaluate,
+                        init_state, instrument_program, make_program,
+                        make_segment_fn, resolve_attack, resolve_threat,
+                        run_rounds, threat_model, wpfed_program)
+from repro.core.adversary import ATTACKS, THREATS, Attack, attack_key
+from repro.core.attacks import attack_active
+from repro.core.rounds import program_round
+
+
+def _bitwise_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        x, y = np.asarray(x), np.asarray(y)
+        assert x.dtype == y.dtype and x.shape == y.shape
+        assert x.tobytes() == y.tobytes()
+
+
+@pytest.fixture(scope="module")
+def ctx(tiny_fed):
+    f = dict(tiny_fed)
+    f["state0"] = init_state(f["apply_fn"], f["init_fn"], f["opt"],
+                             f["fed"], jax.random.PRNGKey(0))
+    f["mask"] = jnp.arange(f["fed"].num_clients) >= 4   # last 2 of 6
+    return f
+
+
+# ---------------------------------------------------------------------------
+# one-place validation: resolve_attack / threat_model / resolve_threat
+# ---------------------------------------------------------------------------
+def test_resolve_attack_validates():
+    init_fn = lambda k: {"w": jnp.zeros((2,))}
+    with pytest.raises(ValueError, match="unknown attack"):
+        resolve_attack("dos")
+    with pytest.raises(ValueError, match="init_fn"):
+        resolve_attack("corrupt")
+    with pytest.raises(ValueError, match="init_fn"):
+        resolve_attack("poison")
+    with pytest.raises(ValueError, match="target_id"):
+        resolve_attack("forge_codes")
+    with pytest.raises(ValueError, match="every"):
+        resolve_attack("corrupt", init_fn=init_fn, every=0)
+    with pytest.raises(ValueError, match="start_round"):
+        resolve_attack("corrupt", init_fn=init_fn, start_round=-1)
+    # §4.8 schedule defaults live on the registry entry
+    a = resolve_attack("poison", init_fn=init_fn)
+    assert (a.start_round, a.every) == (50, 3)
+    b = resolve_attack("lie_in_reveal")
+    assert (b.start_round, b.every) == (0, 1)
+    assert set(ATTACKS) == {"forge_codes", "corrupt", "poison",
+                            "lie_in_reveal"}
+
+
+def test_threat_model_validates(ctx):
+    lie = resolve_attack("lie_in_reveal")
+    with pytest.raises(ValueError, match="at least one"):
+        threat_model([], ctx["mask"])
+    with pytest.raises(TypeError, match="resolve_attack"):
+        threat_model([lambda s: s], ctx["mask"])
+    with pytest.raises(ValueError, match="bool"):
+        threat_model([lie], jnp.arange(6))          # int mask
+    with pytest.raises(ValueError, match="1-D"):
+        threat_model([lie], jnp.zeros((2, 3), bool))
+    tm = threat_model([lie], ctx["mask"], name="liars")
+    assert tm.name == "liars" and len(tm.attacks) == 1
+
+
+def test_attacker_mask_tail():
+    m = attacker_mask_tail(8, 0.25)
+    assert m.tolist() == [False] * 6 + [True] * 2
+    with pytest.raises(ValueError):
+        attacker_mask_tail(8, 0.0)      # no attackers
+    with pytest.raises(ValueError):
+        attacker_mask_tail(8, 1.0)      # nobody honest
+
+
+def test_resolve_threat_presets(ctx):
+    with pytest.raises(ValueError, match="unknown threat"):
+        resolve_threat("byzantine", num_clients=6)
+    with pytest.raises(ValueError, match="init_fn"):
+        resolve_threat("poison", num_clients=6)     # poison needs init_fn
+    tm = resolve_threat("lsh_cheat", num_clients=6, attacker_frac=0.34,
+                        init_fn=ctx["init_fn"], start_round=2)
+    assert [a.name for a in tm.attacks] == ["corrupt", "forge_codes"]
+    assert all(a.start_round == 2 for a in tm.attacks)
+    assert int(jnp.sum(tm.attacker_mask)) == 2
+    lie = resolve_threat("lie_in_reveal", num_clients=6)
+    assert [a.name for a in lie.attacks] == ["lie_in_reveal"]
+    assert set(THREATS) == {"lsh_cheat", "poison", "lie_in_reveal"}
+
+
+# ---------------------------------------------------------------------------
+# scan-safe scheduling
+# ---------------------------------------------------------------------------
+def test_attack_active_matches_host_gate_traced():
+    active = jax.jit(jax.vmap(lambda r: attack_active(r, 3, 2)))(
+        jnp.arange(10))
+    expect = [(r >= 3) and ((r - 3) % 2 == 0) for r in range(10)]
+    assert active.tolist() == expect
+
+
+def test_poison_step_gates_under_jit_with_traced_round(ctx):
+    """Regression (PR 4 satellite): the old host `if round_idx >=
+    start_round` raised/mis-gated when round_idx was a tracer."""
+    f = ctx
+    step = jax.jit(lambda s, r: attacks.poison_step(
+        s, f["mask"], f["init_fn"], jax.random.PRNGKey(3), r,
+        start_round=1, every=2))
+    w0 = np.asarray(f["state0"].params["w"][0])
+    fired = np.asarray(step(f["state0"], jnp.asarray(1)).params["w"][0])
+    idle = np.asarray(step(f["state0"], jnp.asarray(0)).params["w"][0])
+    assert not np.array_equal(fired, w0)            # active round re-inits
+    assert np.array_equal(fired[:4], w0[:4])        # honest rows untouched
+    assert np.array_equal(idle, w0)                 # warm-up round is a no-op
+
+
+def test_attack_fires_inside_gossip_scan(ctx):
+    """A marker attack (rankings += 1) scheduled at start_round=1,
+    every=2 must fire at gossip rounds 1 and 3 of a 4-round segment —
+    where the round index is a lax.scan tracer. WPFed's gossip epoch
+    never rewrites rankings, so the final state shows exactly the two
+    scheduled firings on top of round 0's announcement."""
+    f = ctx
+    marker = Attack("marker",
+                    lambda s, mask, r, k: s._replace(rankings=s.rankings + 1),
+                    start_round=1, every=2)
+    tm = threat_model([marker], f["mask"], name="marker")
+    prog = wpfed_program(f["apply_fn"], f["opt"], f["fed"])
+    st_clean, _c, _m = jax.jit(prog.global_round)(f["state0"], f["data"])
+    seg = jax.jit(make_segment_fn(instrument_program(prog, tm), 4))
+    st, _metrics = seg(f["state0"], f["data"])
+    assert int(st.round) == 4
+    np.testing.assert_array_equal(np.asarray(st.rankings),
+                                  np.asarray(st_clean.rankings) + 2)
+
+
+# ---------------------------------------------------------------------------
+# in-graph path bit-exact vs the legacy per-round host loop (Schedule(1))
+# ---------------------------------------------------------------------------
+def _legacy_attack_loop(round_fn, hook, state, data, rounds):
+    """Verbatim copy of the pre-PR4 benchmarks.common.run_method attack
+    path: mutate state with an eager host hook, then run one jitted
+    round, every round."""
+    round_fn = jax.jit(round_fn)
+    for r in range(rounds):
+        state = hook(state, r)
+        state, _m = round_fn(state, data)
+    return state
+
+
+@pytest.mark.parametrize("method", ["wpfed", "proxyfl"])
+def test_in_graph_attacks_bitexact_vs_legacy_host_loop(ctx, method):
+    f = ctx
+    KEY = jax.random.PRNGKey(123)
+    START, EVERY = 1, 2
+    tm = threat_model(
+        [resolve_attack("corrupt", init_fn=f["init_fn"],
+                        start_round=START, every=EVERY),
+         resolve_attack("forge_codes", target_id=0,
+                        start_round=START, every=EVERY)],
+        f["mask"], key=KEY, name="cheat")
+    prog = make_program(method, f["apply_fn"], f["opt"], f["fed"])
+    st_engine, history = run_rounds(
+        instrument_program(prog, tm), f["state0"], f["data"], rounds=4,
+        schedule=Schedule(1))
+
+    def hook(state, r):                 # the legacy eager per-round hook
+        if r >= START and (r - START) % EVERY == 0:
+            state = attacks.corrupt_params(state, f["mask"], f["init_fn"],
+                                           attack_key(KEY, 0, r))
+            state = attacks.forge_lsh_codes(state, f["mask"], 0)
+        return state
+
+    st_legacy = _legacy_attack_loop(program_round(prog), hook,
+                                    f["state0"], f["data"], 4)
+    _bitwise_equal(st_legacy, st_engine)
+    assert [h["round"] for h in history] == [0, 1, 2, 3]
+
+
+def test_attacked_gossip_schedule_runs_whole_segments(ctx):
+    """Acceptance: an adversarial run drives Schedule(reselect_every=4)
+    through run_rounds — one compiled segment per period, attacks and
+    threat telemetry included, no host loop."""
+    f = ctx
+    tm = resolve_threat("poison", num_clients=6, attacker_frac=0.34,
+                        init_fn=f["init_fn"], key=jax.random.PRNGKey(5),
+                        start_round=1, every=2)
+    prog = instrument_program(
+        wpfed_program(f["apply_fn"], f["opt"], f["fed"]), tm)
+    segments = []
+    st, hist = run_rounds(prog, f["state0"], f["data"], rounds=8,
+                          schedule=Schedule(4),
+                          on_reselect=lambda r0, s: segments.append(r0))
+    assert segments == [0, 4]           # two periods, host sync per period
+    assert int(st.round) == 8
+    for h in hist:
+        assert 0.0 <= h["attacker_admission_rate"] <= 1.0
+        assert np.isfinite(h["rank_score_honest"])
+        assert np.isfinite(h["rank_score_attacker"])
+
+
+# ---------------------------------------------------------------------------
+# §3.6 end-to-end: lying reporters flagged by the engine's own metrics
+# ---------------------------------------------------------------------------
+def test_lie_in_reveal_reporters_flagged_end_to_end(ctx):
+    f = ctx
+    tm = threat_model([resolve_attack("lie_in_reveal")], f["mask"],
+                      name="liars")
+    prog = instrument_program(
+        wpfed_program(f["apply_fn"], f["opt"], f["fed"]), tm)
+    _st, hist = run_rounds(prog, f["state0"], f["data"], rounds=2,
+                           schedule=Schedule(1))
+    # every round the liars reveal a ranking differing from their
+    # commitment; the §3.6 check flags exactly the 2 liars of 6
+    for h in hist:
+        assert abs(h["honest_reporter_frac"] - 4 / 6) < 1e-6
+
+
+def test_instrumented_metrics_absent_without_selection_arrays(ctx):
+    """Baselines that expose no selection arrays gain no bogus
+    telemetry — the augmentation is derived, not fabricated."""
+    f = ctx
+    tm = threat_model(
+        [resolve_attack("corrupt", init_fn=f["init_fn"], start_round=1)],
+        f["mask"], key=jax.random.PRNGKey(2), name="corrupt")
+    prog = instrument_program(
+        make_program("silo", f["apply_fn"], f["opt"], f["fed"]), tm)
+    _st, hist = run_rounds(prog, f["state0"], f["data"], rounds=2,
+                           schedule=Schedule(2))
+    for h in hist:
+        assert "attacker_admission_rate" not in h
+        assert np.isfinite(h["mean_loss"])

@@ -59,7 +59,7 @@ def test_wpfed_announcements_change(fed_run):
 def test_commit_reveal_catches_liar(tiny_fed, fed_run):
     state = fed_run["state"]
     liar = jnp.array([True, False, False, False, False, False])
-    lied = attacks.lie_in_reveal(state, liar, jax.random.PRNGKey(5))
+    lied = attacks.lie_in_reveal(state, liar)
     det = verify_rankings_fnv(lied.rankings, lied.commitments)
     assert not bool(det[0])
     assert bool(jnp.all(det[1:]))
