@@ -34,7 +34,8 @@ def main() -> None:
     t0 = time.time()
 
     if want("kernels"):
-        print("# kernel micro-benchmarks (name,us_per_call,tpu_est_us)")
+        print("# kernel micro-benchmarks "
+              "(name,us_per_call,tpu_est_us,spread_pct)")
         from benchmarks import kernel_micro
         # explicit argv: kernel_micro must not re-parse run.py's flags,
         # and its selection baseline goes to RESULTS_DIR — only a direct

@@ -12,7 +12,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.configs.paper_models import FedConfig, mnist_cnn
+from repro.configs.paper_models import (FedConfig, mnist_cnn,
+                                        recommended_dedupe)
 from repro.core import (evaluate, init_state, resolve_schedule, run_rounds,
                         wpfed_program)
 from repro.core.chain import Blockchain
@@ -33,7 +34,12 @@ def main():
     ap.add_argument("--ref-mode", default="personal",
                     choices=["personal", "public"],
                     help="public: shared reference set, M forwards per "
-                         "exchange instead of M*N (DESIGN.md §7)")
+                         "exchange instead of M*N (DESIGN.md §7); also "
+                         "enables the Eq. 7 duplicate-evidence dedupe")
+    ap.add_argument("--tiling", default="auto",
+                    choices=["auto", "oneshot", "tiled"],
+                    help="kernel VMEM regime for selection + exchange "
+                         "(DESIGN.md §10)")
     ap.add_argument("--schedule", default="sync",
                     choices=["sync", "gossip"],
                     help="gossip: re-select every --reselect-every rounds, "
@@ -46,7 +52,10 @@ def main():
     fed = FedConfig(num_clients=args.clients, num_neighbors=6, top_k=4,
                     local_steps=args.local_steps, lsh_bits=256,
                     selection_backend=args.backend,
-                    exchange_backend=args.backend, ref_mode=args.ref_mode)
+                    exchange_backend=args.backend, ref_mode=args.ref_mode,
+                    selection_tiling=args.tiling,
+                    exchange_tiling=args.tiling,
+                    dedupe_rankings=recommended_dedupe(args.ref_mode))
     ds = make_mnist_federated(num_clients=args.clients, per_client=200,
                               ref_per_client=32)
     data = {k: jnp.asarray(v) for k, v in ds.stacked().items()}

@@ -3,9 +3,14 @@
 # (smoke mode — covers LSH projection, Hamming, fused selection, the
 # fused all-in-one exchange, the round-program engine and the adversary
 # instrumentation, emitting benchmarks/BENCH_rounds.json +
-# BENCH_adversary.json) + a reduced-scale run of the attack-resilience
-# example (the in-graph ThreatModel path end-to-end, attacks firing
-# inside a gossip segment). Usage: scripts/ci.sh [extra pytest args]
+# BENCH_adversary.json) + the VMEM-tiled kernel smoke (DESIGN.md §10:
+# tiled selection/exchange in interpret mode at shapes whose one-shot
+# working set exceeds the VMEM budget) + a reduced-scale run of the
+# attack-resilience example (the in-graph ThreatModel path end-to-end,
+# attacks firing inside a gossip segment) + a 1024-client dryrun on the
+# tiled backend (the 10^4-client scaling path lowered under sharding,
+# in a fresh process because jax locks the device count at first init).
+# Usage: scripts/ci.sh [extra pytest args]
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -16,8 +21,16 @@ python -m pytest -x -q "$@"
 echo "== kernel micro-benchmark (smoke) =="
 python benchmarks/kernel_micro.py --smoke
 
+echo "== tiled kernels beyond the one-shot VMEM budget (smoke) =="
+python scripts/tiled_smoke.py
+
 echo "== attack-resilience example (smoke) =="
 python examples/attack_resilience.py --clients 6 --rounds 3 \
     --per-client 48 --reselect-every 3
+
+echo "== 1024-client dryrun on the tiled backend =="
+XLA_FLAGS="--xla_force_host_platform_device_count=512" \
+    python -m repro.launch.fed --dryrun --clients 1024 \
+    --ref-mode public --tiling tiled
 
 echo "CI OK"

@@ -85,17 +85,41 @@ class FedConfig:
     # "auto" kernel on TPU / oracle elsewhere.
     selection_backend: str = "auto"   # Eq. 5-8 selection (DESIGN.md §4)
     exchange_backend: str = "auto"    # Eq. 3 + §3.5 exchange (DESIGN.md §7)
+    # kernel tiling regime, resolved by repro.core.backends
+    # .resolve_tiling (DESIGN.md §10): "oneshot" holds the full working
+    # set in VMEM per program (bit-exact defaults), "tiled" streams
+    # VMEM-bounded tiles (selection: column-tiled two-pass top-N,
+    # bit-exact; exchange: R/C-tiled online softmax, tolerance-bounded),
+    # "auto" picks from an explicit per-program VMEM estimate.
+    selection_tiling: str = "auto"
+    exchange_tiling: str = "auto"
     # reference-set regime (DESIGN.md §7): "personal" exchanges logits
     # on each client's own X_i^ref (M*N neighbor forwards via gathered
     # params — the paper's point-to-point protocol); "public" evaluates
     # ONE shared reference set (the abstract's public reference dataset)
     # so the exchange needs only M forwards and a logit gather.
     ref_mode: str = "personal"
+    # Eq. 7 ranking-score dedupe (DESIGN.md §7 caveat): collapse
+    # duplicate revealed ranking vectors to one vote before scoring.
+    # Off by default (the paper's literal Eq. 7); the launchers set it
+    # from `recommended_dedupe(ref_mode)` — on under "public", where
+    # every selector sees the same l_ij for a neighbor and Eq. 7
+    # otherwise aggregates duplicated evidence.
+    dedupe_rankings: bool = False
     # verification toggles (ablations / attack studies)
     use_lsh: bool = True           # w/o LSH ablation
     use_rank: bool = True          # w/o Rank ablation
     lsh_verification: bool = True  # §3.5 output-KL lower-half filter
     rank_verification: bool = True # §3.6 commit-and-reveal
+
+
+def recommended_dedupe(ref_mode: str) -> bool:
+    """The Eq. 7 dedupe setting launchers apply per reference regime
+    (DESIGN.md §10, one place): under "public" every selector sees the
+    same l_ij for a neighbor, so duplicate revealed rankings carry no
+    independent evidence and dedupe is on; "personal" keeps the
+    paper's literal Eq. 7 (and the legacy bit-exactness pins)."""
+    return ref_mode == "public"
 
 
 PAPER_FED_OPTIMA = {

@@ -1,4 +1,4 @@
-"""Backend resolution for kernel-backed protocol subsystems.
+"""Backend & tiling resolution for kernel-backed protocol subsystems.
 
 `FedConfig` carries one backend field per kernel-backed subsystem
 (`selection_backend`, `exchange_backend`); both accept the same three
@@ -9,6 +9,20 @@ lives in exactly one place (DESIGN.md §4, §7):
               correctness path, not a CPU speedup),
   "oracle" -> the bit-exact pure-jnp twin,
   "auto"   -> kernel on TPU, oracle elsewhere.
+
+Each kernel-backed subsystem additionally carries a *tiling* field
+(`selection_tiling`, `exchange_tiling`) resolved by `resolve_tiling`
+(DESIGN.md §10):
+
+  "oneshot" -> the original kernels that hold their full working set
+               per program (bit-exact defaults; VMEM is O(problem)),
+  "tiled"   -> the VMEM-tiled streaming kernels (selection: column-
+               tiled two-pass top-N, bit-exact; exchange: R/C-tiled
+               online-softmax, tolerance-bounded — see §10),
+  "auto"    -> oneshot while the per-program working set fits the VMEM
+               budget, tiled beyond it — an explicit estimate
+               (`selection_vmem_bytes` / `exchange_vmem_bytes`)
+               instead of an OOM at lowering time.
 
 This module deliberately imports only jax. `repro.core` modules import
 it directly; `repro.kernels.ops.resolve_backend` delegates here via a
@@ -21,6 +35,12 @@ from __future__ import annotations
 import jax
 
 BACKENDS = ("auto", "kernel", "oracle")
+TILINGS = ("auto", "oneshot", "tiled")
+
+# TPU v5e VMEM is ~16 MiB/core; the budget leaves headroom for the
+# compiler's own double-buffering and spills (DESIGN.md §10).
+VMEM_LIMIT_BYTES = 16 * 2 ** 20
+VMEM_BUDGET_BYTES = int(VMEM_LIMIT_BYTES * 0.75)
 
 
 def interpret() -> bool:
@@ -36,3 +56,62 @@ def resolve(backend: str) -> str:
         raise ValueError(
             f"unknown backend: {backend!r} (expected one of {BACKENDS})")
     return backend
+
+
+# ---------------------------------------------------------------------------
+# per-program VMEM estimates (DESIGN.md §10 carries the derivations)
+# ---------------------------------------------------------------------------
+def selection_vmem_bytes(m: int, bits_tot: int, *, block_m: int = 8) -> int:
+    """One-shot `fused_select` working set per program: unpacked +-1
+    row/column codes ((BM + M) * bits) + the (BM, M) weight block, f32,
+    plus the packed uint32 inputs."""
+    words = bits_tot // 32
+    unpacked = (block_m + m) * bits_tot * 4
+    weights = block_m * m * 4
+    packed = (block_m + m) * words * 4
+    return unpacked + weights + packed
+
+
+def selection_tiled_vmem_bytes(bits_tot: int, *, block_m: int = 128,
+                               block_k: int = 512, nsel: int = 16) -> int:
+    """Column-tiled `fused_select_tiled` working set per program:
+    O(tile), independent of M — unpacked (BM + BK) codes, the (BM, BK)
+    weight tile, and the (BM, N) running top-N scratch."""
+    unpacked = (block_m + block_k) * bits_tot * 4
+    weights = block_m * block_k * 4
+    scratch = 2 * block_m * max(nsel, 1) * 4
+    return unpacked + weights + scratch
+
+
+def exchange_vmem_bytes(n: int, r: int, c: int, *, block_m: int = 4) -> int:
+    """One-shot `fused_exchange` working set per program: the
+    (BM, N, R, C) neighbor-logit tile plus the (BM, R, C) own tile and
+    the (BM, R, C) target output, f32."""
+    return block_m * (n + 2) * r * c * 4
+
+
+def exchange_tiled_vmem_bytes(n: int, *, block_m: int = 4, block_r: int = 8,
+                              block_c: int = 512) -> int:
+    """Streamed `fused_exchange_streamed` working set per program:
+    O(tile) — the (BM, N, BR, BC) neighbor tile, the (BM, BR, BC) own
+    tile, and the online-softmax scratch (4 arrays of (BM, N, BR) plus
+    2 of (BM, BR))."""
+    tiles = block_m * (n + 1) * block_r * block_c * 4
+    scratch = (4 * block_m * n * block_r + 2 * block_m * block_r) * 4
+    return tiles + scratch
+
+
+def resolve_tiling(tiling: str, est_oneshot_bytes: int, *,
+                   budget_bytes: int = None) -> str:
+    """Validate and resolve a tiling string to "oneshot" or "tiled".
+
+    "auto" compares the one-shot kernel's per-program VMEM estimate
+    against the budget — the explicit form of the decision that used to
+    be an OOM at M ~ 10^4 clients / vocab-scale reference sets."""
+    if tiling == "auto":
+        budget = VMEM_BUDGET_BYTES if budget_bytes is None else budget_bytes
+        return "oneshot" if est_oneshot_bytes <= budget else "tiled"
+    if tiling not in ("oneshot", "tiled"):
+        raise ValueError(
+            f"unknown tiling: {tiling!r} (expected one of {TILINGS})")
+    return tiling

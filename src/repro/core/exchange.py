@@ -14,10 +14,19 @@ selection subsystem (DESIGN.md §7):
   "oracle" -> the bit-exact jnp twin (ref.all_in_one_exchange_ref),
   "auto"   -> kernel on TPU, oracle elsewhere.
 
+`FedConfig.exchange_tiling` layers the VMEM regime on top (DESIGN.md
+§10): "oneshot" is the bit-exact default above; "tiled" streams
+R/C-tiled blocks with an online softmax (vocab-scale reference sets —
+tolerance-bounded, §3.5 mask preserved); "auto" picks from the
+explicit per-program VMEM estimate (`backends.exchange_vmem_bytes`)
+instead of OOMing. On the oracle backend "tiled" selects the streaming
+jnp twin (`ref.streamed_exchange_ref`) — the CPU path for shapes the
+one-shot oracle cannot materialize.
+
 The unfused pieces (`distill.cross_entropy`,
 `verify.lsh_verification_mask`, `distill.aggregate_neighbor_outputs`)
-remain the semantic reference — tests assert both fused paths match
-their composition bit-exactly.
+remain the semantic reference — tests assert both one-shot fused paths
+match their composition bit-exactly.
 """
 from __future__ import annotations
 
@@ -28,7 +37,7 @@ import jax.numpy as jnp
 
 from repro.core import backends
 from repro.kernels import ref
-from repro.kernels.exchange import fused_exchange
+from repro.kernels.exchange import fused_exchange, fused_exchange_streamed
 
 
 class ExchangeResult(NamedTuple):
@@ -40,15 +49,22 @@ class ExchangeResult(NamedTuple):
 
 
 def all_in_one_exchange(own_logits, neighbor_logits, y_ref, sel_mask, fed,
-                        *, backend: str | None = None) -> ExchangeResult:
+                        *, backend: str | None = None,
+                        tiling: str | None = None) -> ExchangeResult:
     """Distill + evaluate + verify in one pass over the exchanged logits.
 
     own_logits: (M, R, C) — each client's outputs on its reference set;
     neighbor_logits: (M, N, R, C) — the selected neighbors' outputs on
     that same set (gathered, DESIGN.md §3); y_ref: (M, R) int labels;
     sel_mask: (M, N) bool selected slots; fed: FedConfig (consumes
-    lsh_verification and exchange_backend). `backend` overrides
-    fed.exchange_backend when given.
+    lsh_verification, exchange_backend and exchange_tiling).
+    `backend` / `tiling` override the FedConfig fields when given.
+
+    The tiling regime resolves from the explicit one-shot VMEM
+    estimate (`backends.resolve_tiling`, DESIGN.md §10): shapes whose
+    (BM, N, R, C) tile fits the budget keep the bit-exact one-shot
+    path; beyond it the streamed R/C-tiled path runs (tolerance-bounded
+    l_ij/target, identical §3.5 mask off exact kl ties).
 
     With fed.lsh_verification=False the §3.5 filter is skipped and
     valid_mask == sel_mask (the "w/o verification" ablation).
@@ -59,11 +75,21 @@ def all_in_one_exchange(own_logits, neighbor_logits, y_ref, sel_mask, fed,
         return ExchangeResult(
             jnp.zeros((m, 0), jnp.float32), jnp.zeros((m, 0), bool),
             jnp.zeros((m, r, c), jnp.float32), jnp.zeros((m,), bool))
+    r, c = neighbor_logits.shape[-2:]
     resolved = backends.resolve(backend or fed.exchange_backend)
+    resolved_tiling = backends.resolve_tiling(
+        tiling or fed.exchange_tiling,
+        backends.exchange_vmem_bytes(n, r, c))
     if resolved == "kernel":
-        out = fused_exchange(own_logits, neighbor_logits, y_ref, sel_mask,
-                             lsh_verification=fed.lsh_verification,
-                             interpret=backends.interpret())
+        exchange_fn = (fused_exchange_streamed
+                       if resolved_tiling == "tiled" else fused_exchange)
+        out = exchange_fn(own_logits, neighbor_logits, y_ref, sel_mask,
+                          lsh_verification=fed.lsh_verification,
+                          interpret=backends.interpret())
+    elif resolved_tiling == "tiled":
+        out = ref.streamed_exchange_ref(
+            own_logits, neighbor_logits, y_ref, sel_mask,
+            lsh_verification=fed.lsh_verification)
     else:
         out = ref.all_in_one_exchange_ref(
             own_logits, neighbor_logits, y_ref, sel_mask,

@@ -25,7 +25,7 @@ import jax.numpy as jnp
 
 from repro.core import backends
 from repro.kernels import ops, ref
-from repro.kernels.selection import fused_select
+from repro.kernels.selection import fused_select, fused_select_tiled
 
 
 def selection_weights(scores, dist_norm, gamma: float, *,
@@ -53,15 +53,23 @@ def select_neighbors(weights, num_neighbors: int):
     return top_i.astype(jnp.int32), mask
 
 
-def select_partners(codes, scores, fed, *, rng=None, backend=None):
+def select_partners(codes, scores, fed, *, rng=None, backend=None,
+                    tiling=None):
     """Eq. 6-8 + top-N in one call: the WPFed partner-selection step.
 
     codes: (M, W) uint32 published LSH codes; scores: (M,) f32 ranking
     scores (Eq. 7, reporter-filtered by the caller); fed: FedConfig
     (consumes num_neighbors, gamma, lsh_bits, use_lsh, use_rank,
-    selection_backend). rng is required only for the random ablation
-    (use_lsh=False, use_rank=False). `backend` overrides
-    fed.selection_backend when given.
+    selection_backend, selection_tiling). rng is required only for the
+    random ablation (use_lsh=False, use_rank=False). `backend` /
+    `tiling` override fed.selection_backend / fed.selection_tiling
+    when given.
+
+    The kernel path picks one-shot vs column-tiled from the explicit
+    VMEM estimate (`backends.resolve_tiling`, DESIGN.md §10); both are
+    bit-exact against the oracle, so the choice never moves results.
+    The oracle is the jnp twin either way (CPU memory is not
+    VMEM-bounded).
 
     Returns (ids (M, N) int32, sel_mask (M, N) bool). With N <= M-1
     every selected id is a real, non-self client and the mask is all
@@ -76,11 +84,18 @@ def select_partners(codes, scores, fed, *, rng=None, backend=None):
         return select_neighbors(w, n)
     resolved = backends.resolve(backend or fed.selection_backend)
     if resolved == "kernel":
-        ids, top_w = fused_select(
+        bits_tot = codes.shape[1] * 32
+        resolved_tiling = backends.resolve_tiling(
+            tiling or fed.selection_tiling,
+            backends.selection_vmem_bytes(m, bits_tot))
+        select_fn = (fused_select_tiled if resolved_tiling == "tiled"
+                     else fused_select)
+        ids, top_w = select_fn(
             codes, scores, bits=fed.lsh_bits, gamma=fed.gamma,
             num_neighbors=n, use_lsh=fed.use_lsh, use_rank=fed.use_rank,
             interpret=backends.interpret())
     else:
+        backends.resolve_tiling(tiling or fed.selection_tiling, 0)
         ids, top_w = ref.fused_select_ref(
             codes, scores, bits=fed.lsh_bits, gamma=fed.gamma,
             num_neighbors=n, use_lsh=fed.use_lsh, use_rank=fed.use_rank)

@@ -97,7 +97,7 @@ def select_phase(state: FedState, fed: FedConfig, *,
         reporter_mask = jnp.ones((m,), bool)
     scores = ranking.ranking_scores(
         jnp.where(reporter_mask[:, None], state.rankings, -1),
-        m, fed.top_k)
+        m, fed.top_k, dedupe=fed.dedupe_rankings)
     ids, sel_mask = neighbor.select_partners(
         state.codes, scores, fed,
         rng=rng if not (fed.use_lsh or fed.use_rank) else None)

@@ -30,12 +30,33 @@ def make_ranking(neighbor_ids, losses, valid_mask=None):
     return jnp.where(ok, ranked, -1).astype(jnp.int32)
 
 
+def dedupe_reporter_mask(rankings, reporter_mask):
+    """Collapse duplicate revealed ranking vectors to ONE vote.
+
+    Two reporters revealing the exact same ranking vector contribute no
+    independent evidence to Eq. 7 — systematically so under
+    `ref_mode="public"`, where every selector evaluates a neighbor on
+    the same reference set and sees the same l_ij (DESIGN.md §7
+    caveat), and adversarially so when colluding attackers copy
+    rankings to boost mutual scores. Keeps the FIRST reporter of each
+    distinct vector among the currently-unmasked reporters; O(M^2 N)
+    compares, jittable.
+    """
+    same = jnp.all(rankings[:, None, :] == rankings[None, :, :], axis=-1)
+    m = rankings.shape[0]
+    earlier = jnp.arange(m)[None, :] < jnp.arange(m)[:, None]   # k < i
+    dup = jnp.any(same & earlier & reporter_mask[None, :], axis=1)
+    return reporter_mask & ~dup
+
+
 def ranking_scores(rankings, num_clients: int, top_k: int,
-                   reporter_mask=None):
+                   reporter_mask=None, *, dedupe: bool = False):
     """Eq. (7). rankings: (M, N) int32 (-1 = absent).
 
     reporter_mask: (M,) bool — rankings from clients that failed
     commit-and-reveal verification are excluded entirely (§3.6).
+    dedupe: drop duplicate ranking vectors before scoring (see
+    `dedupe_reporter_mask`; recommended under ref_mode="public").
     Returns (num_clients,) f32 scores in [0, 1]; clients never ranked by
     anyone get score 0 (no evidence of quality — consistent with the
     paper's trust-free stance).
@@ -43,6 +64,8 @@ def ranking_scores(rankings, num_clients: int, top_k: int,
     m, n = rankings.shape
     if reporter_mask is None:
         reporter_mask = jnp.ones((m,), bool)
+    if dedupe:
+        reporter_mask = dedupe_reporter_mask(rankings, reporter_mask)
     onehot = jax.nn.one_hot(jnp.where(rankings >= 0, rankings, num_clients),
                             num_clients + 1, dtype=jnp.float32)[..., :-1]
     rep = reporter_mask[:, None, None].astype(jnp.float32)

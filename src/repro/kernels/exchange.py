@@ -33,8 +33,29 @@ the unfused cross_entropy -> lsh_verification_mask ->
 aggregate_neighbor_outputs composition the round used to run.
 
 VMEM per program ~= BM_EXC * (N + 1) * R * C * 4 bytes for the logit
-tiles (at BM=4, N=16, R=64, C=1024 that is ~17 MB — reduce BM_EXC or
-tile R before running vocab-scale reference sets compiled).
+tiles (at BM=4, N=16, R=64, C=1024 that is ~17 MB) — `fused_exchange`
+therefore caps near C ~ 10^3; vocab-scale reference sets need
+`fused_exchange_streamed` (DESIGN.md §10): a (client-block, R-tile,
+C-tile) grid that streams (BM, N, BR, BC) blocks with a
+flash-attention-style online max / log-sum-exp for the shared neighbor
+log-softmax (see kernels/flash_attention.py). CE reduces to
+lse_nb - x_nb[y] (the label logit is gathered as C tiles stream by),
+the §3.5 output-KL to B/A - lse_own + lse_nb where A/B are online
+exp-weighted sums, and the per-row means accumulate across R tiles.
+Exactness contract (DESIGN.md §10): the online reductions REORDER the
+softmax sums, so the streamed path is NOT bit-exact against the
+one-shot oracle — l_ij and target are tolerance-bounded (last-ulp
+scale) against both `ref.all_in_one_exchange_ref` and the streaming
+jnp twin `ref.streamed_exchange_ref` (same tile walk; XLA's
+fusion-dependent FMA/reassociation rewrites keep even kernel-vs-twin
+agreement at the ulp level rather than bitwise), while the §3.5 valid
+mask only flips on exact kl ties and is pinned EQUAL in tests. The
+one-shot kernel/oracle pair remains the bit-exact default; backend
+resolution (`core.backends.resolve_tiling`) only picks the streamed
+path when the one-shot working set exceeds the VMEM budget. The
+distillation-target mean is a second, stateless pass
+(`_target_kernel`) over the same tiles once the §3.5 mask is known;
+its per-element N-contraction is unchanged by R/C tiling.
 """
 from __future__ import annotations
 
@@ -45,6 +66,26 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 BM_EXC = 4          # client block per program
+BR_EXC = 8          # reference-row tile of the streamed kernel
+BC_EXC = 512        # class-column tile of the streamed kernel
+
+
+def _upper_half_mask(kl_mean, sel_int):
+    """§3.5 upper-half keep filter in counting-rank form, shared by the
+    one-shot and streamed kernels: rank(n) = #{m : kl_m < kl_n} +
+    #{m < n : kl_m == kl_n} (the stable-argsort rank)."""
+    bm, n = kl_mean.shape
+    selm = sel_int != 0
+    kls = jnp.where(selm, kl_mean, jnp.inf)
+    n_valid = jnp.sum(sel_int, axis=-1, keepdims=True)
+    keep = (n_valid + 1) // 2
+    lt = kls[:, :, None] < kls[:, None, :]
+    eq = kls[:, :, None] == kls[:, None, :]
+    a_idx = jax.lax.broadcasted_iota(jnp.int32, (bm, n, n), 1)
+    b_idx = jax.lax.broadcasted_iota(jnp.int32, (bm, n, n), 2)
+    rank_of = jnp.sum((lt | (eq & (a_idx < b_idx))).astype(jnp.int32),
+                      axis=1)                         # stable-sort rank
+    return (rank_of < keep) & selm
 
 
 def _exchange_kernel(own_ref, nb_ref, y_ref, sel_ref,
@@ -71,16 +112,7 @@ def _exchange_kernel(own_ref, nb_ref, y_ref, sel_ref,
             own_ref[...].astype(jnp.float32), axis=-1)  # (BM, R, C)
         kl = jnp.sum(jnp.exp(logp_own)[:, None]
                      * (logp_own[:, None] - logp_nb), axis=-1)
-        kls = jnp.where(selm, jnp.mean(kl, axis=-1), jnp.inf)
-        n_valid = jnp.sum(sel_ref[...], axis=-1, keepdims=True)
-        keep = (n_valid + 1) // 2
-        lt = kls[:, :, None] < kls[:, None, :]
-        eq = kls[:, :, None] == kls[:, None, :]
-        a_idx = jax.lax.broadcasted_iota(jnp.int32, (bm, n, n), 1)
-        b_idx = jax.lax.broadcasted_iota(jnp.int32, (bm, n, n), 2)
-        rank_of = jnp.sum((lt | (eq & (a_idx < b_idx))).astype(jnp.int32),
-                          axis=1)                     # stable-sort rank
-        valid = (rank_of < keep) & selm
+        valid = _upper_half_mask(jnp.mean(kl, axis=-1), sel_ref[...])
     else:
         valid = selm
     valid_ref[...] = valid.astype(jnp.int32)
@@ -134,3 +166,176 @@ def fused_exchange(own_logits, neighbor_logits, y_ref, sel_mask, *,
     )(own_p, nb_p, y_p, sel_p)
     valid = valid[:m].astype(bool)
     return l_ij[:m], valid, target[:m], jnp.any(valid, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# streamed (R/C-tiled) variant — vocab-scale reference sets
+# ---------------------------------------------------------------------------
+def _streamed_stats_kernel(own_ref, nb_ref, y_ref, sel_ref,
+                           l_ref, valid_ref,
+                           l_acc, kl_acc, m_nb, a_nb, g_nb, b_x,
+                           m_own, a_own, *, lsh_verification: bool,
+                           r_real: int, c_real: int, br: int, bc: int,
+                           nr: int, nc: int):
+    ri = pl.program_id(1)
+    ci = pl.program_id(2)
+
+    @pl.when((ri == 0) & (ci == 0))
+    def _init_round():
+        l_acc[...] = jnp.zeros_like(l_acc)
+        kl_acc[...] = jnp.zeros_like(kl_acc)
+
+    @pl.when(ci == 0)
+    def _init_tile():
+        m_nb[...] = jnp.full_like(m_nb, -jnp.inf)
+        a_nb[...] = jnp.zeros_like(a_nb)
+        g_nb[...] = jnp.zeros_like(g_nb)
+        b_x[...] = jnp.zeros_like(b_x)
+        m_own[...] = jnp.full_like(m_own, -jnp.inf)
+        a_own[...] = jnp.zeros_like(a_own)
+
+    xo = own_ref[...].astype(jnp.float32)             # (BM, BR, BC)
+    xn = nb_ref[...].astype(jnp.float32)              # (BM, N, BR, BC)
+    col = ci * bc + jax.lax.broadcasted_iota(jnp.int32, (bc,), 0)
+    cvalid = col < c_real                             # (BC,)
+    xo_m = jnp.where(cvalid, xo, -jnp.inf)
+    xn_m = jnp.where(cvalid, xn, -jnp.inf)
+
+    # online max / sum-exp (flash-attention correction; every C tile
+    # contains at least one real column, so the new max is finite and
+    # the correction factors never see inf - inf)
+    mo_new = jnp.maximum(m_own[...], jnp.max(xo_m, axis=-1))
+    co = jnp.exp(m_own[...] - mo_new)
+    po = jnp.exp(xo_m - mo_new[..., None])            # (BM, BR, BC)
+    a_own[...] = a_own[...] * co + jnp.sum(po, axis=-1)
+    mn_new = jnp.maximum(m_nb[...], jnp.max(xn_m, axis=-1))
+    cn = jnp.exp(m_nb[...] - mn_new)
+    a_nb[...] = (a_nb[...] * cn
+                 + jnp.sum(jnp.exp(xn_m - mn_new[..., None]), axis=-1))
+    # cross term of the §3.5 KL: sum_c exp(x_own - m) * (x_own - x_nb)
+    b_x[...] = (b_x[...] * co[:, None]
+                + jnp.sum(po[:, None] * (xo[:, None] - xn), axis=-1))
+    # Eq. 3 label-logit gather: the C tile holding y contributes x[y]
+    # exactly once (raw logits, exact zeros elsewhere)
+    match = col[None, None, :] == y_ref[...][:, :, None]  # (BM, BR, BC)
+    g_nb[...] = g_nb[...] + jnp.sum(
+        jnp.where(match[:, None], xn, 0.0), axis=-1)
+    m_own[...] = mo_new
+    m_nb[...] = mn_new
+
+    @pl.when(ci == nc - 1)
+    def _fold_tile():
+        lse_nb = m_nb[...] + jnp.log(a_nb[...])       # (BM, N, BR)
+        lse_own = m_own[...] + jnp.log(a_own[...])    # (BM, BR)
+        rvalid = (ri * br
+                  + jax.lax.broadcasted_iota(jnp.int32, (br,), 0)) < r_real
+        nll = lse_nb - g_nb[...]
+        l_acc[...] = l_acc[...] + jnp.sum(
+            jnp.where(rvalid, nll, 0.0), axis=-1)
+        kl_r = (b_x[...] / a_own[...][:, None]
+                - lse_own[:, None] + lse_nb)
+        kl_acc[...] = kl_acc[...] + jnp.sum(
+            jnp.where(rvalid, kl_r, 0.0), axis=-1)
+
+    @pl.when((ri == nr - 1) & (ci == nc - 1))
+    def _finalize():
+        l_ref[...] = l_acc[...] / float(r_real)
+        if lsh_verification:
+            valid = _upper_half_mask(kl_acc[...] / float(r_real),
+                                     sel_ref[...])
+        else:
+            valid = sel_ref[...] != 0
+        valid_ref[...] = valid.astype(jnp.int32)
+
+
+def _target_kernel(nb_ref, w_ref, t_ref):
+    """Masked distillation-target mean over one (BM, N, BR, BC) tile.
+    Stateless: the N-contraction is per output element, so R/C tiling
+    does not change its value."""
+    w = w_ref[...].astype(jnp.float32)                # (BM, N)
+    denom = jnp.maximum(jnp.sum(w, axis=-1), 1.0)
+    t_ref[...] = (jnp.einsum("bn,bnrc->brc", w,
+                             nb_ref[...].astype(jnp.float32))
+                  / denom[:, None, None])
+
+
+def streamed_tiles(r: int, c: int, block_r: int, block_c: int):
+    """Clamp the (BR, BC) tile to the (8, 128)-padded problem so small
+    shapes run as a single tile; returns (br, pr, bc, pc)."""
+    br = min(block_r, r + (-r) % 8)
+    bc = min(block_c, c + (-c) % 128)
+    return br, (-r) % br, bc, (-c) % bc
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "lsh_verification", "interpret", "block_m", "block_r", "block_c"))
+def fused_exchange_streamed(own_logits, neighbor_logits, y_ref, sel_mask,
+                            *, lsh_verification: bool = True,
+                            interpret: bool = True, block_m: int = BM_EXC,
+                            block_r: int = BR_EXC, block_c: int = BC_EXC):
+    """Streamed Eq. 3 + §3.5 + target mean (DESIGN.md §10): same
+    contract as `fused_exchange`, but VMEM per program is
+    O(BM * N * BR * BC) — R and C are bounded by HBM, not VMEM.
+    Tolerance-bounded against the one-shot pair and the streaming twin
+    `ref.streamed_exchange_ref` (the online softmax reorders the
+    reductions; the §3.5 mask flips only on exact kl ties — see the
+    module docstring for the full §10 contract)."""
+    m, n, r, c = neighbor_logits.shape
+    import jax.experimental.pallas.tpu as pltpu
+    bm = min(block_m, m + (-m) % BM_EXC)
+    pm = (-m) % bm
+    br, pr, bc, pc = streamed_tiles(r, c, block_r, block_c)
+    own_p = jnp.pad(own_logits.astype(jnp.float32),
+                    ((0, pm), (0, pr), (0, pc)))
+    nb_p = jnp.pad(neighbor_logits.astype(jnp.float32),
+                   ((0, pm), (0, 0), (0, pr), (0, pc)))
+    y_p = jnp.pad(y_ref.astype(jnp.int32), ((0, pm), (0, pr)))
+    sel_p = jnp.pad(sel_mask.astype(jnp.int32), ((0, pm), (0, 0)))
+    mp, nr, nc = m + pm, (r + pr) // br, (c + pc) // bc
+    l_ij, valid = pl.pallas_call(
+        functools.partial(_streamed_stats_kernel,
+                          lsh_verification=lsh_verification,
+                          r_real=r, c_real=c, br=br, bc=bc, nr=nr, nc=nc),
+        grid=(mp // bm, nr, nc),                      # C innermost
+        in_specs=[
+            pl.BlockSpec((bm, br, bc), lambda i, ri, ci: (i, ri, ci)),
+            pl.BlockSpec((bm, n, br, bc),
+                         lambda i, ri, ci: (i, 0, ri, ci)),
+            pl.BlockSpec((bm, br), lambda i, ri, ci: (i, ri)),
+            pl.BlockSpec((bm, n), lambda i, ri, ci: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, n), lambda i, ri, ci: (i, 0)),
+            pl.BlockSpec((bm, n), lambda i, ri, ci: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((mp, n), jnp.float32),
+            jax.ShapeDtypeStruct((mp, n), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bm, n), jnp.float32),         # l_acc
+            pltpu.VMEM((bm, n), jnp.float32),         # kl_acc
+            pltpu.VMEM((bm, n, br), jnp.float32),     # running max (nb)
+            pltpu.VMEM((bm, n, br), jnp.float32),     # running sum-exp (nb)
+            pltpu.VMEM((bm, n, br), jnp.float32),     # label-logit gather
+            pltpu.VMEM((bm, n, br), jnp.float32),     # KL cross term
+            pltpu.VMEM((bm, br), jnp.float32),        # running max (own)
+            pltpu.VMEM((bm, br), jnp.float32),        # running sum-exp (own)
+        ],
+        interpret=interpret,
+    )(own_p, nb_p, y_p, sel_p)
+    target = pl.pallas_call(
+        _target_kernel,
+        grid=(mp // bm, nr, nc),
+        in_specs=[
+            pl.BlockSpec((bm, n, br, bc),
+                         lambda i, ri, ci: (i, 0, ri, ci)),
+            pl.BlockSpec((bm, n), lambda i, ri, ci: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, br, bc), lambda i, ri, ci: (i, ri, ci)),
+        out_shape=jax.ShapeDtypeStruct((mp, r + pr, c + pc), jnp.float32),
+        interpret=interpret,
+    )(nb_p, valid)
+    valid_b = valid[:m].astype(bool)
+    return (l_ij[:m], valid_b, target[:m, :r, :c],
+            jnp.any(valid_b, axis=-1))

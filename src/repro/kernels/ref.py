@@ -111,6 +111,86 @@ def all_in_one_exchange_ref(own_logits, neighbor_logits, y_ref, sel_mask,
     return l_ij, valid, target, has_target
 
 
+def streamed_exchange_ref(own_logits, neighbor_logits, y_ref, sel_mask,
+                          *, lsh_verification: bool = True,
+                          block_r: int = 8, block_c: int = 512):
+    """Streaming twin of `kernels.exchange.fused_exchange_streamed`
+    (DESIGN.md §10): walks the SAME (R-tile, C-tile) grid with the same
+    online max / log-sum-exp updates in the same order — the semantic
+    reference for the streaming algorithm, and the CPU path for
+    vocab-scale shapes the one-shot oracle cannot hold. Agreement with
+    the kernel AND with `all_in_one_exchange_ref` is tolerance-bounded,
+    not bitwise: the online softmax reorders the C reduction, the R
+    means accumulate per tile, and XLA's fusion-dependent
+    FMA/reassociation rewrites move the running accumulators by last
+    ulps between compilation contexts. The §3.5 mask only flips on
+    exact kl ties and is pinned equal in tests
+    (tests/test_tiled_kernels.py)."""
+    from repro.kernels.exchange import streamed_tiles
+
+    m, n, r, c = neighbor_logits.shape
+    br, pr, bc, pc = streamed_tiles(r, c, block_r, block_c)
+    own_p = jnp.pad(own_logits.astype(jnp.float32), ((0, 0), (0, pr),
+                                                     (0, pc)))
+    nb_p = jnp.pad(neighbor_logits.astype(jnp.float32),
+                   ((0, 0), (0, 0), (0, pr), (0, pc)))
+    y_p = jnp.pad(y_ref.astype(jnp.int32), ((0, 0), (0, pr)))
+    nr, nc = (r + pr) // br, (c + pc) // bc
+
+    l_acc = jnp.zeros((m, n), jnp.float32)
+    kl_acc = jnp.zeros((m, n), jnp.float32)
+    for ri in range(nr):
+        m_nb = jnp.full((m, n, br), -jnp.inf)
+        a_nb = jnp.zeros((m, n, br))
+        g_nb = jnp.zeros((m, n, br))
+        b_x = jnp.zeros((m, n, br))
+        m_own = jnp.full((m, br), -jnp.inf)
+        a_own = jnp.zeros((m, br))
+        y_t = y_p[:, ri * br:(ri + 1) * br]
+        for ci in range(nc):
+            xo = own_p[:, ri * br:(ri + 1) * br, ci * bc:(ci + 1) * bc]
+            xn = nb_p[:, :, ri * br:(ri + 1) * br, ci * bc:(ci + 1) * bc]
+            col = ci * bc + jnp.arange(bc, dtype=jnp.int32)
+            cvalid = col < c
+            xo_m = jnp.where(cvalid, xo, -jnp.inf)
+            xn_m = jnp.where(cvalid, xn, -jnp.inf)
+            mo_new = jnp.maximum(m_own, jnp.max(xo_m, axis=-1))
+            co = jnp.exp(m_own - mo_new)
+            po = jnp.exp(xo_m - mo_new[..., None])
+            a_own = a_own * co + jnp.sum(po, axis=-1)
+            mn_new = jnp.maximum(m_nb, jnp.max(xn_m, axis=-1))
+            cn = jnp.exp(m_nb - mn_new)
+            a_nb = (a_nb * cn
+                    + jnp.sum(jnp.exp(xn_m - mn_new[..., None]), axis=-1))
+            b_x = (b_x * co[:, None]
+                   + jnp.sum(po[:, None] * (xo[:, None] - xn), axis=-1))
+            match = col[None, None, :] == y_t[:, :, None]
+            g_nb = g_nb + jnp.sum(jnp.where(match[:, None], xn, 0.0),
+                                  axis=-1)
+            m_own, m_nb = mo_new, mn_new
+        lse_nb = m_nb + jnp.log(a_nb)
+        lse_own = m_own + jnp.log(a_own)
+        rvalid = (ri * br + jnp.arange(br, dtype=jnp.int32)) < r
+        nll = lse_nb - g_nb
+        l_acc = l_acc + jnp.sum(jnp.where(rvalid, nll, 0.0), axis=-1)
+        kl_r = b_x / a_own[:, None] - lse_own[:, None] + lse_nb
+        kl_acc = kl_acc + jnp.sum(jnp.where(rvalid, kl_r, 0.0), axis=-1)
+
+    l_ij = l_acc / float(r)
+    sel_int = sel_mask.astype(jnp.int32)
+    if lsh_verification:
+        from repro.kernels.exchange import _upper_half_mask
+        valid = _upper_half_mask(kl_acc / float(r), sel_int)
+    else:
+        valid = sel_mask.astype(bool)
+    w = valid.astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(w, axis=-1), 1.0)
+    target = (jnp.einsum("mn,mnrc->mrc", w, nb_p)
+              / denom[:, None, None])[:, :r, :c]
+    has_target = jnp.sum(w, axis=-1) > 0
+    return l_ij, valid, target, has_target
+
+
 def hamming_all_pairs_ref(codes_a, codes_b):
     """Oracle for hamming: broadcast XOR + SWAR popcount."""
     x = codes_a[:, None, :] ^ codes_b[None, :, :]

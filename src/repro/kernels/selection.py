@@ -39,8 +39,23 @@ The packed word axis is NOT padded: the arrays the kernel computes on
 are the unpacked (rows, W*32) bit matrices, whose last dim is already
 a lane multiple for any bits in {128, 256, 512, ...}. VMEM per program
 ~= (BM + M) * bits * 4 (unpacked codes) + BM * M * 4 (weights); at
-BM=8, M=4096, bits=256 that is ~4.3 MB. Scaling past M ~ 10^4 needs a
-column-tiled two-pass top-N (DESIGN.md §4, future).
+BM=8, M=4096, bits=256 that is ~4.3 MB — `fused_select` therefore caps
+at M ~ 10^4 clients.
+
+`fused_select_tiled` removes that ceiling (DESIGN.md §10): a second
+grid axis streams (BM, BK) *column tiles* of the same ±1 Gram matrix
+while a VMEM scratch carries a per-row running top-N. Pass 1 is the
+streamed merge-by-knockout: each tile's weights are concatenated with
+the running (vals, ids) candidates and N knockout iterations keep the
+best N. Because earlier tiles hold strictly smaller global column
+indices, putting the running candidates FIRST in the concatenation
+preserves `lax.top_k`'s first-max (ascending-index) tie-breaking
+exactly; weights are the same exact-integer distances fed to the same
+elementwise exp, so ids AND weights are bit-exact against
+`ref.fused_select_ref` and the one-shot kernel at every M. Pass 2
+(the Eq. 8 weighting itself) is unchanged — it is computed per tile
+from the exact distances. VMEM per program ~= (BM + BK) * bits * 4 +
+BM * BK * 4, independent of M.
 """
 from __future__ import annotations
 
@@ -51,6 +66,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 BM_SEL = 8          # row block (f32 sublane width)
+BM_SEL_TILED = 128  # row block of the column-tiled kernel
+BK_SEL = 512        # column tile of the column-tiled kernel
 
 
 def unpack_pm1(words):
@@ -63,36 +80,54 @@ def unpack_pm1(words):
     return (2.0 * bits01.astype(jnp.float32) - 1.0).reshape(r, w * 32)
 
 
-def _select_kernel(a_ref, b_ref, s_ref, ids_ref, w_ref, *, bits: int,
-                   gamma: float, nsel: int, m_real: int,
-                   use_lsh: bool, use_rank: bool):
-    row0 = pl.program_id(0) * BM_SEL
-    ua = unpack_pm1(a_ref[...])                       # (BM, bits_tot)
-    ub = unpack_pm1(b_ref[...])                       # (Mp, bits_tot)
+def _gram_weights(a_words, b_words, s_row, row0, col0, *, bits: int,
+                  gamma: float, m_real: int, use_lsh: bool, use_rank: bool):
+    """Shared Eq. 6-8 tile: unpack -> ±1 Gram distances -> weights ->
+    self/padding mask. Identical ops in the one-shot and tiled kernels,
+    so the weights are bit-identical between them."""
+    ua = unpack_pm1(a_words)                          # (BM, bits_tot)
+    ub = unpack_pm1(b_words)                          # (BK, bits_tot)
     bits_tot = ua.shape[1]
     gram = jnp.dot(ua, ub.T, preferred_element_type=jnp.float32)
     d = (float(bits_tot) - gram) * 0.5                # exact integer f32
 
-    mp = d.shape[1]
+    bm, bk = d.shape
     if use_rank:
-        w = jnp.broadcast_to(s_ref[...], (BM_SEL, mp))
+        w = jnp.broadcast_to(s_row, (bm, bk))
     else:
-        w = jnp.ones((BM_SEL, mp), jnp.float32)
+        w = jnp.ones((bm, bk), jnp.float32)
     if use_lsh:
         w = w * jnp.exp(-gamma * (d / float(bits)))
 
-    col = jax.lax.broadcasted_iota(jnp.int32, (BM_SEL, mp), 1)
-    row = row0 + jax.lax.broadcasted_iota(jnp.int32, (BM_SEL, mp), 0)
-    w = jnp.where((col == row) | (col >= m_real), -jnp.inf, w)
+    col = col0 + jax.lax.broadcasted_iota(jnp.int32, (bm, bk), 1)
+    row = row0 + jax.lax.broadcasted_iota(jnp.int32, (bm, bk), 0)
+    return jnp.where((col == row) | (col >= m_real), -jnp.inf, w), col
 
+
+def _knockout_topn(cand_v, cand_i, nsel: int):
+    """N iterations of (max, first-argmax, knock out) over the
+    candidate axis — reproduces lax.top_k's ascending-index
+    tie-breaking as long as cand_i is ascending within equal values."""
+    pos = jax.lax.broadcasted_iota(jnp.int32, cand_v.shape, 1)
     ids, vals = [], []
     for _ in range(nsel):                             # static unroll
-        vals.append(jnp.max(w, axis=1))
-        idx = jnp.argmax(w, axis=1)
-        ids.append(idx)
-        w = jnp.where(col == idx[:, None], -jnp.inf, w)
-    ids_ref[...] = jnp.stack(ids, axis=1).astype(jnp.int32)
-    w_ref[...] = jnp.stack(vals, axis=1)
+        vals.append(jnp.max(cand_v, axis=1))
+        p = jnp.argmax(cand_v, axis=1)
+        ids.append(jnp.take_along_axis(cand_i, p[:, None], axis=1)[:, 0])
+        cand_v = jnp.where(pos == p[:, None], -jnp.inf, cand_v)
+    return jnp.stack(vals, axis=1), jnp.stack(ids, axis=1).astype(jnp.int32)
+
+
+def _select_kernel(a_ref, b_ref, s_ref, ids_ref, w_ref, *, bits: int,
+                   gamma: float, nsel: int, m_real: int,
+                   use_lsh: bool, use_rank: bool):
+    row0 = pl.program_id(0) * BM_SEL
+    w, col = _gram_weights(a_ref[...], b_ref[...], s_ref[...], row0, 0,
+                           bits=bits, gamma=gamma, m_real=m_real,
+                           use_lsh=use_lsh, use_rank=use_rank)
+    vals, ids = _knockout_topn(w, col, nsel)
+    ids_ref[...] = ids
+    w_ref[...] = vals
 
 
 @functools.partial(jax.jit, static_argnames=(
@@ -132,4 +167,91 @@ def fused_select(codes, scores, *, bits: int, gamma: float,
         ],
         interpret=interpret,
     )(padded, padded, scores_p)
+    return ids[:m], top_w[:m]
+
+
+def _select_tiled_kernel(a_ref, b_ref, s_ref, ids_ref, w_ref,
+                         vals_scr, ids_scr, *, bits: int, gamma: float,
+                         nsel: int, m_real: int, use_lsh: bool,
+                         use_rank: bool, bm: int, bk: int, nj: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        vals_scr[...] = jnp.full_like(vals_scr, -jnp.inf)
+        ids_scr[...] = jnp.zeros_like(ids_scr)
+
+    row0 = pl.program_id(0) * bm
+    w, col = _gram_weights(a_ref[...], b_ref[...], s_ref[...],
+                           row0, j * bk, bits=bits, gamma=gamma,
+                           m_real=m_real, use_lsh=use_lsh,
+                           use_rank=use_rank)
+    # Merge-by-knockout: running candidates FIRST — they come from
+    # earlier column tiles, so their global ids are strictly smaller
+    # and first-max argmax keeps lax.top_k's ascending-index
+    # tie-breaking across tile boundaries.
+    cand_v = jnp.concatenate([vals_scr[...], w], axis=1)
+    cand_i = jnp.concatenate([ids_scr[...], col], axis=1)
+    vals, ids = _knockout_topn(cand_v, cand_i, nsel)
+    vals_scr[...] = vals
+    ids_scr[...] = ids
+
+    @pl.when(j == nj - 1)
+    def _finalize():
+        ids_ref[...] = ids_scr[...]
+        w_ref[...] = vals_scr[...]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "bits", "gamma", "num_neighbors", "use_lsh", "use_rank", "interpret",
+    "block_m", "block_k"))
+def fused_select_tiled(codes, scores, *, bits: int, gamma: float,
+                       num_neighbors: int, use_lsh: bool = True,
+                       use_rank: bool = True, interpret: bool = True,
+                       block_m: int = BM_SEL_TILED, block_k: int = BK_SEL):
+    """Column-tiled two-pass fused selection (DESIGN.md §10): same
+    contract as `fused_select` — (ids (M, N) int32, top_w (M, N) f32),
+    bit-exact against it and `ref.fused_select_ref` — but VMEM per
+    program is O(block_m * block_k) instead of O(block_m * M), so M is
+    bounded by HBM, not VMEM. Rows pad to the `block_m` grid, columns
+    to the `block_k` stream; padded columns are masked to -inf
+    in-kernel and never win."""
+    m, w = codes.shape
+    nsel = min(num_neighbors, m - 1)
+    if nsel <= 0:                       # degenerate M <= 1 federation
+        return (jnp.zeros((m, 0), jnp.int32), jnp.zeros((m, 0), jnp.float32))
+    import jax.experimental.pallas.tpu as pltpu
+    bm = min(block_m, m + (-m) % BM_SEL)          # small-M: one row block
+    pm = (-m) % bm
+    rows = jnp.pad(codes, ((0, pm), (0, 0)))
+    bk = min(block_k, m + (-m) % 128)             # small-M: one column tile
+    pk = (-m) % bk
+    cols = jnp.pad(codes, ((0, pk), (0, 0)))
+    scores_p = jnp.pad(scores.astype(jnp.float32), (0, pk))[None, :]
+    mr, mc = m + pm, m + pk
+    nj = mc // bk
+    ids, top_w = pl.pallas_call(
+        functools.partial(_select_tiled_kernel, bits=bits, gamma=gamma,
+                          nsel=nsel, m_real=m, use_lsh=use_lsh,
+                          use_rank=use_rank, bm=bm, bk=bk, nj=nj),
+        grid=(mr // bm, nj),                      # column tiles innermost
+        in_specs=[
+            pl.BlockSpec((bm, w), lambda i, j: (i, 0)),
+            pl.BlockSpec((bk, w), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, bk), lambda i, j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, nsel), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, nsel), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((mr, nsel), jnp.int32),
+            jax.ShapeDtypeStruct((mr, nsel), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bm, nsel), jnp.float32),
+            pltpu.VMEM((bm, nsel), jnp.int32),
+        ],
+        interpret=interpret,
+    )(rows, cols, scores_p)
     return ids[:m], top_w[:m]

@@ -24,7 +24,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.paper_models import (FedConfig, PAPER_FED_OPTIMA,
-                                        aecg_tcn, mnist_cnn, seeg_tcn)
+                                        aecg_tcn, mnist_cnn,
+                                        recommended_dedupe, seeg_tcn)
 from repro.core import (evaluate, init_state, instrument_program,
                         make_segment_fn, resolve_schedule, resolve_threat,
                         run_rounds, wpfed_program)
@@ -60,23 +61,29 @@ def chain_publisher(chain: Blockchain, num_clients: int):
 def run_federation(dataset: str = "mnist", rounds: int = 10,
                    num_clients: int = 0, seed: int = 0, fed: FedConfig = None,
                    backend: str = "auto", ref_mode: str = "personal",
-                   schedule: str = "sync", reselect_every: int = 0,
-                   attack: str = "none", attack_frac: float = 0.5,
-                   attack_start: int = -1, log=print):
+                   tiling: str = "auto", schedule: str = "sync",
+                   reselect_every: int = 0, attack: str = "none",
+                   attack_frac: float = 0.5, attack_start: int = -1,
+                   log=print):
     """`backend` drives BOTH kernel-backed subsystems (selection and
-    exchange — one flag, resolved by repro.core.backends.resolve).
-    An explicit `fed` config wins outright: backend/ref_mode apply only
-    to the default-constructed config (asserted, not silently dropped).
-    `schedule`/`reselect_every` resolve via core.rounds.resolve_schedule;
-    `attack` resolves via core.adversary.resolve_threat and instruments
-    the program in-graph (DESIGN.md §9) — evaluation then reports the
-    honest cohort. `attack_start=-1` keeps the threat's registry
-    defaults (e.g. the §4.8 poison warm-up). Publishes every reselection
-    to a host `Blockchain` and verifies the chain before returning
+    exchange — one flag, resolved by repro.core.backends.resolve), and
+    `tiling` both VMEM regimes (resolve_tiling, DESIGN.md §10).
+    An explicit `fed` config wins outright: backend/ref_mode/tiling
+    apply only to the default-constructed config (asserted, not
+    silently dropped). ref_mode="public" also enables the Eq. 7
+    duplicate-evidence dedupe (every selector sees the same l_ij for a
+    neighbor there — DESIGN.md §7). `schedule`/`reselect_every` resolve
+    via core.rounds.resolve_schedule; `attack` resolves via
+    core.adversary.resolve_threat and instruments the program in-graph
+    (DESIGN.md §9) — evaluation then reports the honest cohort.
+    `attack_start=-1` keeps the threat's registry defaults (e.g. the
+    §4.8 poison warm-up). Publishes every reselection to a host
+    `Blockchain` and verifies the chain before returning
     (state, history).
     """
-    if fed is not None and (backend != "auto" or ref_mode != "personal"):
-        raise ValueError("pass backend/ref_mode inside the explicit "
+    if fed is not None and (backend != "auto" or ref_mode != "personal"
+                            or tiling != "auto"):
+        raise ValueError("pass backend/ref_mode/tiling inside the explicit "
                          "FedConfig, not alongside it")
     sched = resolve_schedule(schedule, reselect_every)
     ds_fn = DATASETS[dataset]
@@ -86,7 +93,9 @@ def run_federation(dataset: str = "mnist", rounds: int = 10,
     fed = fed or FedConfig(num_clients=ds.num_clients, num_neighbors=n_opt,
                            alpha=alpha, gamma=gamma, rounds=rounds,
                            selection_backend=backend,
-                           exchange_backend=backend, ref_mode=ref_mode)
+                           exchange_backend=backend, ref_mode=ref_mode,
+                           selection_tiling=tiling, exchange_tiling=tiling,
+                           dedupe_rankings=recommended_dedupe(ref_mode))
     mcfg = MODEL_FOR[dataset]()
     apply_fn = functools.partial(apply_client_model, mcfg)
     init_fn = lambda k: init_client_model(mcfg, k)
@@ -114,8 +123,9 @@ def run_federation(dataset: str = "mnist", rounds: int = 10,
 
 def dryrun_fed_round(num_clients: int = 256, arch: str = "phi3-medium-14b",
                      backend: str = "kernel", ref_mode: str = "personal",
-                     reselect_every: int = 1, attack: str = "none",
-                     attack_frac: float = 0.5, attack_start: int = -1):
+                     tiling: str = "auto", reselect_every: int = 1,
+                     attack: str = "none", attack_frac: float = 0.5,
+                     attack_start: int = -1):
     """Beyond-paper: lower one WPFed reselection period with
     REDUCED-transformer clients sharded over the production mesh's data
     axis — proves the protocol itself scales out (the paper simulated
@@ -123,7 +133,14 @@ def dryrun_fed_round(num_clients: int = 256, arch: str = "phi3-medium-14b",
     lowering exercises the batched LSH + fused selection + fused
     exchange kernels under sharding; ref_mode="public" lowers the
     M-forward shared-reference exchange instead of the M*N personal
-    one (DESIGN.md §7). `reselect_every=G` lowers the full segment —
+    one (DESIGN.md §7). `tiling="tiled"` forces the VMEM-tiled
+    streaming kernels (column-tiled selection + R/C-tiled exchange,
+    DESIGN.md §10) so their lowering composes with sharding — at the
+    dryrun's own lsh_bits=128 / C=1024 shapes "auto" still resolves
+    to one-shot (the budget only forces tiled past M ~ 10^4 at
+    256-bit codes, or vocab-scale C), which is exactly why the tiled
+    path needs the explicit flag here. `reselect_every=G` lowers the
+    full segment —
     one global round plus G-1 gossip epochs under lax.scan
     (DESIGN.md §8). `attack` instruments the program with an in-graph
     ThreatModel before lowering (DESIGN.md §9) — e.g. a 256-client
@@ -141,7 +158,9 @@ def dryrun_fed_round(num_clients: int = 256, arch: str = "phi3-medium-14b",
     fed = FedConfig(num_clients=num_clients, num_neighbors=8, top_k=4,
                     local_steps=1, lsh_bits=128, ref_batch=8,
                     selection_backend=backend, exchange_backend=backend,
-                    ref_mode=ref_mode)
+                    ref_mode=ref_mode, selection_tiling=tiling,
+                    exchange_tiling=tiling,
+                    dedupe_rankings=recommended_dedupe(ref_mode))
     mesh = make_production_mesh()
 
     def apply_fn(params, tokens):
@@ -194,6 +213,7 @@ def dryrun_fed_round(num_clients: int = 256, arch: str = "phi3-medium-14b",
         "fed_round_clients": m,
         "client_arch": cfg.name,
         "ref_mode": ref_mode,
+        "tiling": tiling,
         "reselect_every": reselect_every,
         "attack": attack,
         "mesh": "16x16",
@@ -221,6 +241,13 @@ def main(argv=None):
                     help="personal: each client's own reference set "
                          "(M*N forwards); public: one shared reference "
                          "set, exchange is a gather (DESIGN.md §7)")
+    ap.add_argument("--tiling", default="auto",
+                    choices=["auto", "oneshot", "tiled"],
+                    help="kernel VMEM regime — drives both selection "
+                         "AND exchange (DESIGN.md §10): oneshot holds "
+                         "the full working set per program, tiled "
+                         "streams VMEM-bounded tiles, auto picks from "
+                         "the explicit VMEM estimate")
     ap.add_argument("--schedule", default="sync",
                     choices=["sync", "gossip"],
                     help="sync: re-select every round (the paper); "
@@ -249,7 +276,7 @@ def main(argv=None):
         dryrun_fed_round(num_clients=args.clients or 256,
                          backend="kernel" if args.backend == "auto"
                          else args.backend,
-                         ref_mode=args.ref_mode,
+                         ref_mode=args.ref_mode, tiling=args.tiling,
                          reselect_every=sched.reselect_every,
                          attack=args.attack, attack_frac=args.attack_frac,
                          attack_start=args.attack_start)
@@ -258,6 +285,7 @@ def main(argv=None):
                                 num_clients=args.clients, seed=args.seed,
                                 backend=args.backend,
                                 ref_mode=args.ref_mode,
+                                tiling=args.tiling,
                                 schedule=args.schedule,
                                 reselect_every=args.reselect_every,
                                 attack=args.attack,

@@ -268,11 +268,12 @@ def test_dryrun_threads_clients_and_ref_mode(monkeypatch):
     calls = {}
 
     def fake_dryrun(num_clients=256, arch="phi3-medium-14b",
-                    backend="kernel", ref_mode="personal",
+                    backend="kernel", ref_mode="personal", tiling="auto",
                     reselect_every=1, attack="none", attack_frac=0.5,
                     attack_start=-1):
         calls.update(num_clients=num_clients, backend=backend,
-                     ref_mode=ref_mode, reselect_every=reselect_every,
+                     ref_mode=ref_mode, tiling=tiling,
+                     reselect_every=reselect_every,
                      attack=attack, attack_frac=attack_frac,
                      attack_start=attack_start)
 
@@ -281,14 +282,17 @@ def test_dryrun_threads_clients_and_ref_mode(monkeypatch):
                        "--xla_force_host_platform_device_count=512")
     fed_launch.main(["--dryrun", "--clients", "32", "--ref-mode", "public"])
     assert calls == {"num_clients": 32, "backend": "kernel",
-                     "ref_mode": "public", "reselect_every": 1,
+                     "ref_mode": "public", "tiling": "auto",
+                     "reselect_every": 1,
                      "attack": "none", "attack_frac": 0.5,
                      "attack_start": -1}
     fed_launch.main(["--dryrun", "--backend", "oracle",
+                     "--tiling", "tiled",
                      "--schedule", "gossip", "--reselect-every", "4",
                      "--attack", "poison", "--attack-frac", "0.25",
                      "--attack-start", "5"])
     assert calls == {"num_clients": 256, "backend": "oracle",
-                     "ref_mode": "personal", "reselect_every": 4,
+                     "ref_mode": "personal", "tiling": "tiled",
+                     "reselect_every": 4,
                      "attack": "poison", "attack_frac": 0.25,
                      "attack_start": 5}

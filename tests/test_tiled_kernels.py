@@ -1,0 +1,368 @@
+"""VMEM-tiled kernels: column-tiled two-pass selection and streamed
+R/C-tiled exchange (DESIGN.md §10).
+
+Contracts:
+  * tiled selection is BIT-EXACT against `ref.fused_select_ref` and the
+    one-shot kernel — ids and weights — at every M, including ragged
+    shapes (M not a tile multiple), cross-tile ties, ablation switches
+    and the N = M-1 clamp edge (exact-integer distances + shared
+    elementwise exp + order-preserving merge-by-knockout);
+  * streamed exchange is tolerance-bounded against the one-shot oracle
+    and the streaming twin for l_ij / target_ref (the online softmax
+    reorders reductions), while the §3.5 valid mask and has_target are
+    pinned EQUAL (they only flip on exact kl ties);
+  * `backends.resolve_tiling` picks one-shot vs tiled from the explicit
+    VMEM estimate, and the subsystem entry points thread the tiling
+    fields end to end.
+"""
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_models import FedConfig
+from repro.core import all_in_one_exchange, backends, neighbor, ranking
+from repro.kernels import ops, ref
+from repro.kernels.exchange import (fused_exchange, fused_exchange_streamed,
+                                    streamed_tiles)
+from repro.kernels.selection import fused_select, fused_select_tiled
+
+
+def _codes(m, words, seed=0):
+    raw = jax.random.bernoulli(jax.random.PRNGKey(seed), 0.5, (m, words * 32))
+    return ops.pack_bits(jnp.where(raw, 1.0, -1.0))
+
+
+def _exchange_inputs(m, n, r, c, seed=0, sel_p=0.7):
+    k = jax.random.PRNGKey(seed)
+    own = jax.random.normal(k, (m, r, c)) * 3
+    nb = jax.random.normal(jax.random.fold_in(k, 1), (m, n, r, c)) * 3
+    y = jax.random.randint(jax.random.fold_in(k, 2), (m, r), 0, c)
+    sel = jax.random.bernoulli(jax.random.fold_in(k, 3), sel_p, (m, n))
+    return own, nb, y, sel
+
+
+# ---------------------------------------------------------------------------
+# column-tiled selection: bit-exactness at ragged shapes
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("m,words,n,bm,bk", [
+    (6, 4, 3, 8, 128),        # single tile both axes
+    (37, 8, 5, 8, 128),       # ragged M on both grids
+    (9, 4, 8, 8, 128),        # N = M-1 clamp edge
+    (130, 4, 7, 32, 128),     # ragged across two column tiles
+    (300, 8, 16, 128, 128),   # three column tiles, ragged rows
+    (257, 4, 12, 64, 128),    # one past a tile boundary
+])
+def test_tiled_selection_bit_exact_ragged(m, words, n, bm, bk):
+    codes = _codes(m, words, seed=m * words)
+    scores = jax.random.uniform(jax.random.PRNGKey(m + n), (m,))
+    kw = dict(bits=words * 32, gamma=1.0, num_neighbors=n)
+    ids_t, w_t = fused_select_tiled(codes, scores, **kw,
+                                    block_m=bm, block_k=bk)
+    ids_o, w_o = ref.fused_select_ref(codes, scores, **kw)
+    ids_k, w_k = fused_select(codes, scores, **kw)
+    assert bool(jnp.all(ids_t == ids_o)) and bool(jnp.all(w_t == w_o))
+    assert bool(jnp.all(ids_t == ids_k)) and bool(jnp.all(w_t == w_k))
+
+
+@pytest.mark.parametrize("use_lsh,use_rank", [(True, False), (False, True)])
+def test_tiled_selection_ablation_switches(use_lsh, use_rank):
+    m, words, n = 150, 4, 6
+    codes = _codes(m, words, seed=42)
+    scores = jax.random.uniform(jax.random.PRNGKey(1), (m,))
+    kw = dict(bits=words * 32, gamma=0.5, num_neighbors=n,
+              use_lsh=use_lsh, use_rank=use_rank)
+    ids_t, w_t = fused_select_tiled(codes, scores, **kw,
+                                    block_m=32, block_k=128)
+    ids_o, w_o = ref.fused_select_ref(codes, scores, **kw)
+    assert bool(jnp.all(ids_t == ids_o)) and bool(jnp.all(w_t == w_o))
+
+
+def test_tiled_selection_cross_tile_ties():
+    """Equal weights spanning column-tile boundaries must keep
+    lax.top_k's ascending-index order: the running candidates hold
+    strictly smaller global ids than the current tile, so putting them
+    first in the merge preserves first-max tie-breaking."""
+    m, n = 300, 12
+    base = _codes(3, 4, seed=2)
+    groups = jax.random.randint(jax.random.PRNGKey(1), (m,), 0, 3)
+    codes = base[groups]                      # 3 distinct codes -> ties
+    scores = jnp.round(jax.random.uniform(jax.random.PRNGKey(3),
+                                          (m,)) * 4) / 4
+    ids_t, w_t = fused_select_tiled(codes, scores, bits=128, gamma=1.0,
+                                    num_neighbors=n, block_m=64,
+                                    block_k=128)
+    ids_o, w_o = ref.fused_select_ref(codes, scores, bits=128, gamma=1.0,
+                                      num_neighbors=n)
+    assert bool(jnp.all(ids_t == ids_o)) and bool(jnp.all(w_t == w_o))
+
+
+def test_tiled_selection_degenerate_single_client():
+    codes = _codes(1, 4, seed=0)
+    ids, w = fused_select_tiled(codes, jnp.ones((1,)), bits=128, gamma=1.0,
+                                num_neighbors=3)
+    assert ids.shape == (1, 0) and w.shape == (1, 0)
+
+
+@pytest.mark.parametrize("m", [1024, 4096])
+def test_tiled_selection_bit_exact_large(m):
+    """The scale the one-shot kernel was built for (1024) and a scale
+    past its comfort zone (4096, ~4.3 MB/program one-shot): the tiled
+    kernel stays bit-exact with default production tiles."""
+    codes = _codes(m, 8, seed=m)
+    scores = jax.random.uniform(jax.random.PRNGKey(m), (m,))
+    kw = dict(bits=256, gamma=1.0, num_neighbors=16)
+    ids_o, w_o = jax.jit(functools.partial(
+        ref.fused_select_ref, **kw))(codes, scores)
+    ids_t, w_t = fused_select_tiled(codes, scores, **kw)
+    assert bool(jnp.all(ids_t == ids_o)) and bool(jnp.all(w_t == w_o))
+
+
+def test_select_partners_tiling_paths_agree():
+    m = 37
+    codes = _codes(m, 4, seed=7)
+    scores = jax.random.uniform(jax.random.PRNGKey(2), (m,))
+    fed = FedConfig(num_clients=m, num_neighbors=5, top_k=2, lsh_bits=128)
+    outs = {}
+    for tiling in ("oneshot", "tiled", "auto"):
+        outs[tiling] = neighbor.select_partners(
+            codes, scores, fed, backend="kernel", tiling=tiling)
+    for tiling in ("tiled", "auto"):
+        assert bool(jnp.all(outs[tiling][0] == outs["oneshot"][0])), tiling
+        assert bool(jnp.all(outs[tiling][1] == outs["oneshot"][1])), tiling
+
+
+def test_select_partners_rejects_unknown_tiling():
+    fed = FedConfig(num_clients=6, num_neighbors=3, top_k=2, lsh_bits=128,
+                    selection_tiling="huge")
+    with pytest.raises(ValueError):
+        neighbor.select_partners(_codes(6, 4), jnp.zeros((6,)), fed)
+
+
+# ---------------------------------------------------------------------------
+# streamed exchange: tolerance contract at ragged shapes
+# ---------------------------------------------------------------------------
+def _assert_exchange_close(got, want, name):
+    l_g, v_g, t_g, h_g = got
+    l_w, v_w, t_w, h_w = want
+    np.testing.assert_allclose(np.asarray(l_g), np.asarray(l_w),
+                               rtol=2e-5, atol=1e-5, err_msg=name)
+    assert bool(jnp.all(v_g == v_w)), f"{name}: valid mask"
+    np.testing.assert_allclose(np.asarray(t_g), np.asarray(t_w),
+                               rtol=2e-5, atol=1e-5, err_msg=name)
+    assert bool(jnp.all(h_g == h_w)), f"{name}: has_target"
+
+
+@pytest.mark.parametrize("m,n,r,c,br,bc", [
+    (5, 3, 9, 17, 4, 128),     # ragged M, R; single C tile
+    (7, 5, 12, 70, 8, 128),    # ragged everything
+    (4, 2, 8, 513, 8, 128),    # one past a C-tile boundary
+    (6, 4, 16, 40, 8, 128),    # two R tiles
+    (3, 4, 5, 300, 8, 128),    # three C tiles, ragged R
+    (9, 1, 3, 4, 8, 128),      # single-neighbor, tiny tail shapes
+    (1, 4, 4, 5, 8, 128),      # single client block
+])
+@pytest.mark.parametrize("lsh_verification", [True, False])
+def test_streamed_exchange_matches_contract(m, n, r, c, br, bc,
+                                            lsh_verification):
+    own, nb, y, sel = _exchange_inputs(m, n, r, c, seed=m * n + r)
+    out_s = fused_exchange_streamed(own, nb, y, sel,
+                                    lsh_verification=lsh_verification,
+                                    block_r=br, block_c=bc)
+    out_o = ref.all_in_one_exchange_ref(own, nb, y, sel,
+                                        lsh_verification=lsh_verification)
+    out_t = ref.streamed_exchange_ref(own, nb, y, sel,
+                                      lsh_verification=lsh_verification,
+                                      block_r=br, block_c=bc)
+    _assert_exchange_close(out_s, out_o, "kernel vs one-shot oracle")
+    _assert_exchange_close(out_s, out_t, "kernel vs streaming twin")
+    for a, b, nm in zip(out_s, out_o, ("l_ij", "valid", "target", "has")):
+        assert a.dtype == b.dtype and a.shape == b.shape, nm
+
+
+def test_streamed_exchange_vocab_scale_smoke():
+    """A C past the one-shot kernel's VMEM comfort zone (the §10
+    motivation): est one-shot VMEM > budget, streamed stays O(tile)."""
+    m, n, r, c = 4, 8, 16, 8192
+    assert (backends.exchange_vmem_bytes(n, r, c)
+            > backends.VMEM_BUDGET_BYTES)
+    assert (backends.exchange_tiled_vmem_bytes(n)
+            < backends.VMEM_BUDGET_BYTES)
+    own, nb, y, sel = _exchange_inputs(m, n, r, c, seed=3)
+    out_s = fused_exchange_streamed(own, nb, y, sel)
+    out_t = ref.streamed_exchange_ref(own, nb, y, sel)
+    _assert_exchange_close(out_s, out_t, "vocab-scale kernel vs twin")
+
+
+def test_streamed_exchange_upper_half_keep_count():
+    own, nb, y, sel = _exchange_inputs(8, 5, 6, 4, seed=11, sel_p=0.6)
+    _, valid, _, _ = fused_exchange_streamed(own, nb, y, sel,
+                                             block_r=4, block_c=128)
+    n_valid = np.asarray(jnp.sum(sel, axis=1))
+    kept = np.asarray(jnp.sum(valid, axis=1))
+    assert (kept == (n_valid + 1) // 2).all()
+    assert not bool(jnp.any(valid & ~sel))
+
+
+def test_exchange_entry_point_tiling_paths():
+    """all_in_one_exchange threads exchange_tiling end to end: tiled
+    kernel and tiled oracle (the streaming twin) agree with the
+    one-shot paths per the §10 contract."""
+    own, nb, y, sel = _exchange_inputs(10, 4, 6, 5, seed=23)
+    fed = FedConfig(num_clients=10, num_neighbors=4, top_k=2, lsh_bits=128)
+    base = all_in_one_exchange(own, nb, y, sel, fed, backend="oracle",
+                               tiling="oneshot")
+    for backend in ("kernel", "oracle"):
+        out = all_in_one_exchange(own, nb, y, sel, fed, backend=backend,
+                                  tiling="tiled")
+        _assert_exchange_close(tuple(out), tuple(base),
+                               f"{backend}+tiled vs oracle+oneshot")
+    auto = all_in_one_exchange(own, nb, y, sel, fed, backend="oracle")
+    for a, b in zip(auto, base):          # tiny shape: auto == one-shot
+        assert bool(jnp.all(a == b))
+
+
+def test_exchange_entry_point_rejects_unknown_tiling():
+    own, nb, y, sel = _exchange_inputs(4, 2, 3, 3)
+    fed = FedConfig(num_clients=4, num_neighbors=2, top_k=2, lsh_bits=128,
+                    exchange_tiling="mega")
+    with pytest.raises(ValueError):
+        all_in_one_exchange(own, nb, y, sel, fed)
+
+
+# ---------------------------------------------------------------------------
+# VMEM-estimate resolution
+# ---------------------------------------------------------------------------
+def test_resolve_tiling_auto_uses_budget():
+    assert backends.resolve_tiling("auto", 0) == "oneshot"
+    assert backends.resolve_tiling(
+        "auto", backends.VMEM_BUDGET_BYTES) == "oneshot"
+    assert backends.resolve_tiling(
+        "auto", backends.VMEM_BUDGET_BYTES + 1) == "tiled"
+    assert backends.resolve_tiling("auto", 100, budget_bytes=10) == "tiled"
+    assert backends.resolve_tiling("oneshot", 1 << 60) == "oneshot"
+    assert backends.resolve_tiling("tiled", 0) == "tiled"
+    with pytest.raises(ValueError):
+        backends.resolve_tiling("huge", 0)
+
+
+def test_vmem_estimates_scale_as_documented():
+    """One-shot grows linearly with the unbounded axis; tiled does not
+    depend on it at all."""
+    assert (backends.selection_vmem_bytes(1 << 16, 256)
+            >= 3.9 * backends.selection_vmem_bytes(1 << 14, 256))
+    assert (backends.exchange_vmem_bytes(16, 64, 1 << 15)
+            >= 15.9 * backends.exchange_vmem_bytes(16, 64, 1 << 11))
+    # the documented M ~ 10^4 / C ~ 10^3 ceilings fall out of the
+    # estimates: one-shot selection at M=65536 and exchange at C=32768
+    # blow the budget, their tiled twins stay comfortably inside it
+    assert (backends.selection_vmem_bytes(1 << 16, 256)
+            > backends.VMEM_BUDGET_BYTES)
+    assert (backends.selection_tiled_vmem_bytes(256)
+            < backends.VMEM_BUDGET_BYTES // 4)
+    assert (backends.exchange_vmem_bytes(16, 64, 1 << 15)
+            > backends.VMEM_BUDGET_BYTES)
+    assert (backends.exchange_tiled_vmem_bytes(16)
+            < backends.VMEM_BUDGET_BYTES // 4)
+
+
+def test_streamed_tiles_clamps_small_shapes():
+    br, pr, bc, pc = streamed_tiles(5, 17, 8, 512)
+    assert br == 8 and (5 + pr) % br == 0
+    assert bc == 128 and (17 + pc) % bc == 0
+    br, pr, bc, pc = streamed_tiles(64, 4096, 8, 512)
+    assert (br, bc) == (8, 512) and pr == 0 and pc == 0
+
+
+# ---------------------------------------------------------------------------
+# Eq. 7 duplicate-evidence dedupe (public-ref ranking correction)
+# ---------------------------------------------------------------------------
+def test_dedupe_counts_duplicate_rankings_once():
+    """Three reporters revealing the same vector must count as one:
+    with dedupe, scores equal the two-distinct-reporter scores."""
+    dup = jnp.array([[2, 3], [2, 3], [2, 3], [0, 1]], jnp.int32)
+    uniq = jnp.array([[2, 3], [0, 1]], jnp.int32)
+    s_dup = ranking.ranking_scores(dup, 4, top_k=1, dedupe=True)
+    s_uniq = ranking.ranking_scores(uniq, 4, top_k=1)
+    np.testing.assert_array_equal(np.asarray(s_dup), np.asarray(s_uniq))
+    # without dedupe the duplicated evidence inflates nothing here
+    # (same ratio) but DOES dominate mixed tallies:
+    mixed = jnp.array([[2, 3], [2, 3], [3, 2]], jnp.int32)
+    s_no = ranking.ranking_scores(mixed, 4, top_k=1)
+    s_yes = ranking.ranking_scores(mixed, 4, top_k=1, dedupe=True)
+    assert float(s_no[2]) == pytest.approx(2 / 3)
+    assert float(s_yes[2]) == pytest.approx(1 / 2)   # one vote per vector
+
+
+def test_dedupe_respects_reporter_mask():
+    """A duplicate of an EXCLUDED reporter is the first honest copy and
+    must survive; duplicates of an honest reporter drop."""
+    r = jnp.array([[1, 2], [1, 2], [1, 2]], jnp.int32)
+    mask = jnp.array([False, True, True])
+    kept = ranking.dedupe_reporter_mask(r, mask)
+    np.testing.assert_array_equal(np.asarray(kept),
+                                  np.array([False, True, False]))
+
+
+def test_dedupe_noop_on_distinct_rankings():
+    r = jnp.array([[1, 2], [2, 1], [0, 2]], jnp.int32)
+    kept = ranking.dedupe_reporter_mask(r, jnp.ones((3,), bool))
+    assert bool(jnp.all(kept))
+    s_plain = ranking.ranking_scores(r, 3, top_k=1)
+    s_dedup = ranking.ranking_scores(r, 3, top_k=1, dedupe=True)
+    np.testing.assert_array_equal(np.asarray(s_plain), np.asarray(s_dedup))
+
+
+def test_dedupe_public_personal_rank_agreement(tiny_fed):
+    """Regression for the §7 duplicated-evidence caveat: on identical
+    reference sets the public and personal regimes produce the same
+    revealed rankings, so the deduped Eq. 7 scores — and the next
+    round's rank ordering — agree between the modes."""
+    from repro.core import init_state, make_wpfed_round
+    f = tiny_fed
+    data = dict(f["data"])
+    data["x_ref"] = jnp.broadcast_to(data["x_ref"][:1], data["x_ref"].shape)
+    data["y_ref"] = jnp.broadcast_to(data["y_ref"][:1], data["y_ref"].shape)
+    scores = {}
+    for mode in ("personal", "public"):
+        fed = dataclasses.replace(f["fed"], ref_mode=mode,
+                                  dedupe_rankings=True)
+        state = init_state(f["apply_fn"], f["init_fn"], f["opt"], fed,
+                           jax.random.PRNGKey(1))
+        round_fn = jax.jit(make_wpfed_round(f["apply_fn"], f["opt"], fed))
+        s1, _ = round_fn(state, data)
+        _, m2 = round_fn(s1, data)          # round 2 scores use reveals
+        scores[mode] = np.asarray(m2["ranking_scores"])
+    np.testing.assert_allclose(scores["public"], scores["personal"],
+                               rtol=1e-6, atol=1e-7)
+    assert np.array_equal(np.argsort(-scores["public"]),
+                          np.argsort(-scores["personal"]))
+
+
+# ---------------------------------------------------------------------------
+# protocol integration: tiled round is invariant
+# ---------------------------------------------------------------------------
+def test_round_selection_tiling_invariant(tiny_fed):
+    """A full WPFed round with tiled selection is bit-identical to the
+    one-shot round (the tiled kernel is bit-exact, so the tiling choice
+    can never move protocol results)."""
+    from repro.core import init_state, make_wpfed_round
+    f = tiny_fed
+    out = {}
+    for tiling in ("oneshot", "tiled"):
+        fed = dataclasses.replace(f["fed"], selection_backend="kernel",
+                                  selection_tiling=tiling)
+        state = init_state(f["apply_fn"], f["init_fn"], f["opt"], fed,
+                           jax.random.PRNGKey(0))
+        round_fn = jax.jit(make_wpfed_round(f["apply_fn"], f["opt"], fed))
+        s1, m1 = round_fn(state, f["data"])
+        s2, m2 = round_fn(s1, f["data"])
+        out[tiling] = (s2, m2)
+    s_o, m_o = out["oneshot"]
+    s_t, m_t = out["tiled"]
+    assert bool(jnp.all(m_o["neighbor_ids"] == m_t["neighbor_ids"]))
+    assert bool(jnp.all(s_o.codes == s_t.codes))
+    assert bool(jnp.all(s_o.rankings == s_t.rankings))
