@@ -55,10 +55,11 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import backends, distill, lsh, neighbor, verify
+from repro.core import ann, backends, distill, lsh, neighbor, verify
 from repro.kernels import ops, ref
 from repro.kernels.lsh_projection import CHUNK, lsh_project_sums_batched
-from repro.kernels.selection import fused_select, fused_select_tiled
+from repro.kernels.selection import (fused_select, fused_select_ann,
+                                     fused_select_tiled)
 
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9
@@ -301,6 +302,173 @@ def exchange_vmem_sweep(cs=(1024, 4096, 32768), n=16, r=64):
             for c in cs]
 
 
+def _clustered_codes(m, bits, n_clusters, flip=0.02, seed=0):
+    """Cluster centers + per-client bit flips — the structured regime
+    the §11 bucket index is built for (a converging federation:
+    similar models agree on ~98% of code bits)."""
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    centers = jax.random.bernoulli(k1, 0.5, (n_clusters, bits))
+    assign = jax.random.randint(k2, (m,), 0, n_clusters)
+    flips = jax.random.bernoulli(k3, flip, (m, bits))
+    raw = jnp.logical_xor(centers[assign], flips)
+    return ops.pack_bits(jnp.where(raw, 1.0, -1.0))
+
+
+def _ann_recall(exact_ids, ann_ids):
+    import numpy as np
+    e, a = np.asarray(exact_ids), np.asarray(ann_ids)
+    hits = sum(len(set(e[i]) & set(a[i])) for i in range(e.shape[0]))
+    return hits / float(e.size)
+
+
+def _ann_prefix_for(m):
+    """Sweep discipline: bucket count scales with M at B = M/32 —
+    matching the sweep's cluster scale (M/32 clusters), so buckets
+    absorb whole clusters without overflow (at B = M/16 cluster-pair
+    collisions overflow the cap and recall drops below the bar). The
+    per-bucket cap, and with it K, stays near-constant across the
+    sweep and the exact/ann FLOP ratio grows like M/K."""
+    return max(4, m.bit_length() - 1 - 5)
+
+
+def bench_ann_selection(ms=(512, 1024, 2048, 4096), bits=256, n=12,
+                        gamma=1.0, iters=3):
+    """The §11 sub-quadratic selection story, measured end to end on
+    clustered codes with concentrated ranking scores (the distance-
+    dominated Eq. 8 regime; score-dispersed regimes are intrinsically
+    non-local — see DESIGN.md §11 — and the probe-curve section
+    records one so the limitation is a number, not a footnote).
+
+    Per sweep point: CPU wall time of the exact fused oracle vs the
+    jitted ann twin (candidate generation INCLUDED — the bucketing is
+    part of the price), recall@N vs the exact oracle, candidate-set
+    size K, and per-bucket occupancy stats so the speedup is
+    attributable to a measured candidate count. `crossover_m` is the
+    smallest sweep M where the ann path wins on wall time."""
+    rows = []
+    for m in ms:
+        pb = _ann_prefix_for(m)
+        codes = _clustered_codes(m, bits, m // 32, seed=m)
+        scores = 0.75 + 0.25 * jax.random.uniform(
+            jax.random.PRNGKey(m + 1), (m,))
+        kw = dict(bits=bits, gamma=gamma, num_neighbors=n)
+
+        exact_fn = jax.jit(lambda c, s: ref.fused_select_ref(c, s, **kw))
+
+        def ann_fn(c, s, _pb=pb):
+            cand = ann.ann_candidates(c, s, seed=3, prefix_bits=_pb,
+                                      probes=_pb, num_neighbors=n)
+            return ref.ann_select_ref(c, s, cand.ids, **kw)
+
+        ann_jit = jax.jit(ann_fn)
+        exact_t = _time(exact_fn, codes, scores, iters=iters)
+        ann_t = _time(ann_jit, codes, scores, iters=iters)
+        ids_e, _ = exact_fn(codes, scores)
+        ids_a, _ = ann_jit(codes, scores)
+        cand = ann.ann_candidates(codes, scores, seed=3, prefix_bits=pb,
+                                  probes=pb, num_neighbors=n)
+        occ = ann.occupancy_stats(cand)
+        k = occ["k"]
+        rows.append({
+            "m": m, "bits": bits, "n": n, "prefix_bits": pb, "probes": pb,
+            "exact_us": round(exact_t.us, 1),
+            "ann_us": round(ann_t.us, 1),
+            "exact_spread_pct": round(exact_t.spread_pct, 1),
+            "ann_spread_pct": round(ann_t.spread_pct, 1),
+            "reps": ann_t.reps,
+            "speedup": round(exact_t.us / ann_t.us, 2),
+            "recall_at_n": round(_ann_recall(ids_e, ids_a), 4),
+            "occupancy": occ,
+            "exact_flops": backends.selection_flops(m, bits),
+            "ann_flops": backends.ann_selection_flops(m, bits, k),
+            "flop_ratio": round(backends.selection_flops(m, bits)
+                                / backends.ann_selection_flops(m, bits, k),
+                                2),
+        })
+    crossover = next((r["m"] for r in rows if r["speedup"] > 1.0), None)
+    return rows, crossover
+
+
+def bench_ann_probe_curve(m=1024, bits=256, n=12, gamma=1.0,
+                          probes_list=(0, 1, 2, 4, 6)):
+    """Recall@N vs probe count — the multi-probe recall knob priced at
+    a fixed federation size, in BOTH score regimes: concentrated
+    (distance-dominated, the §11 design point) and uniform (score-
+    dispersed, the documented hard case). Candidate-set sizes ride
+    along per probe count."""
+    pb = 6
+    codes = _clustered_codes(m, bits, m // 32, seed=7)
+    ks = jax.random.uniform(jax.random.PRNGKey(8), (m,))
+    curves = {}
+    for regime, scores in [("concentrated", 0.75 + 0.25 * ks),
+                           ("uniform", ks)]:
+        ids_e, _ = ref.fused_select_ref(codes, scores, bits=bits,
+                                        gamma=gamma, num_neighbors=n)
+        pts = []
+        for p in probes_list:
+            cand = ann.ann_candidates(codes, scores, seed=3,
+                                      prefix_bits=pb, probes=p,
+                                      num_neighbors=n)
+            ids_a, _ = ref.ann_select_ref(codes, scores, cand.ids,
+                                          bits=bits, gamma=gamma,
+                                          num_neighbors=n)
+            occ = ann.occupancy_stats(cand)
+            pts.append({"probes": p, "k": occ["k"],
+                        "mean_occupancy": occ["mean_occupancy"],
+                        "max_occupancy": occ["max_occupancy"],
+                        "dropped_candidates": occ["dropped_candidates"],
+                        "recall_at_n": round(_ann_recall(ids_e, ids_a), 4)})
+        curves[regime] = pts
+    return {"m": m, "bits": bits, "n": n, "prefix_bits": pb,
+            "curves": curves}
+
+
+def bench_ann_kernel_interpret(ms=(256, 512), bits=256, n=12, gamma=1.0,
+                               iters=3):
+    """Interpret-mode ann kernel vs the exact column-tiled kernel at
+    shapes both can hold: wall time is interpreter time, not TPU time
+    (the ann kernel runs ~K/M times fewer Gram FLOPs but more, smaller
+    grid programs — the analytic FLOP ratio in the sweep rows is the
+    TPU-side claim). The durable assertions: the kernel is bit-exact
+    vs the ann twin on the same candidates, and the prefix_bits=0
+    one-bucket fallback is bit-exact vs `fused_select` (acceptance
+    pin)."""
+    rows = []
+    for m in ms:
+        pb = _ann_prefix_for(m)
+        codes = _clustered_codes(m, bits, m // 32, seed=m)
+        scores = 0.75 + 0.25 * jax.random.uniform(
+            jax.random.PRNGKey(m + 1), (m,))
+        kw = dict(bits=bits, gamma=gamma, num_neighbors=n)
+        cand = ann.ann_candidates(codes, scores, seed=3, prefix_bits=pb,
+                                  probes=pb, num_neighbors=n)
+        tiled_t = _time(lambda c, s: fused_select_tiled(c, s, **kw),
+                        codes, scores, iters=iters)
+        ann_t = _time(lambda c, s, ci: fused_select_ann(
+            c, s, ci, block_m=128, **kw), codes, scores, cand.ids,
+            iters=iters)
+        ids_k, w_k = fused_select_ann(codes, scores, cand.ids,
+                                      block_m=128, **kw)
+        ids_r, w_r = ref.ann_select_ref(codes, scores, cand.ids, **kw)
+        assert bool(jnp.all(ids_k == ids_r)) and bool(jnp.all(w_k == w_r))
+        # one-bucket fallback: bit-exact vs the exact one-shot kernel
+        cand0 = ann.ann_candidates(codes, scores, seed=3, prefix_bits=0,
+                                   probes=0, num_neighbors=n)
+        ids_0, w_0 = fused_select_ann(codes, scores, cand0.ids, **kw)
+        ids_x, w_x = fused_select(codes, scores, **kw)
+        assert bool(jnp.all(ids_0 == ids_x)) and bool(jnp.all(w_0 == w_x))
+        rows.append({"m": m, "bits": bits, "prefix_bits": pb,
+                     "k": int(cand.ids.shape[1]),
+                     "tiled_interpret_us": round(tiled_t.us, 1),
+                     "ann_interpret_us": round(ann_t.us, 1),
+                     "tiled_spread_pct": round(tiled_t.spread_pct, 1),
+                     "ann_spread_pct": round(ann_t.spread_pct, 1),
+                     "reps": ann_t.reps,
+                     "kernel_bit_exact_vs_twin": True,
+                     "one_bucket_bit_exact_vs_fused_select": True})
+    return rows
+
+
 def _tiny_mlp_federation(m):
     """Shared tiny-MLP WPFed setup (16-dim, 3 classes) for the rounds
     and adversary rows."""
@@ -473,6 +641,31 @@ def main(argv=None, log=print):
         log(f"# streamed exchange CPU ratio @ C={r['c']}: "
             f"{r['streamed_vs_oneshot']}x")
 
+    # §11 ANN selection: wall-time sweep + recall/probe curve +
+    # interpret-mode kernel parity (incl. the one-bucket acceptance pin)
+    ann_rows, ann_crossover = bench_ann_selection(
+        (128, 256) if args.smoke else (512, 1024, 2048, 4096),
+        iters=iters)
+    for r in ann_rows:
+        rows.append((f"select_ann_{r['m']}", r["ann_us"], 0.0,
+                     r["ann_spread_pct"]))
+        log(f"# ann selection @ M={r['m']} (pb={r['prefix_bits']}, "
+            f"K={r['occupancy']['k']}): {r['speedup']}x vs exact, "
+            f"recall@{r['n']}={r['recall_at_n']}, "
+            f"flop_ratio={r['flop_ratio']}x")
+    log(f"# ann crossover-M (wall-time win vs exact oracle): "
+        f"{ann_crossover}")
+    ann_curve = bench_ann_probe_curve(m=256 if args.smoke else 1024,
+                                      probes_list=(0, 2) if args.smoke
+                                      else (0, 1, 2, 4, 6))
+    ann_kernel_rows = bench_ann_kernel_interpret(
+        (64,) if args.smoke else (256, 512), iters=iters)
+    for r in ann_kernel_rows:
+        rows.append((f"select_ann_kernel_{r['m']}", r["ann_interpret_us"],
+                     0.0, r["ann_spread_pct"]))
+        log(f"# ann kernel interpret @ M={r['m']}: bit-exact vs twin; "
+            f"one-bucket fallback bit-exact vs fused_select")
+
     rounds_row = bench_rounds(m=4 if args.smoke else 8,
                               rounds=4 if args.smoke else 8, iters=iters)
     for k in ("loop", "g1", "g4"):
@@ -536,6 +729,30 @@ def main(argv=None, log=print):
                        "tiled_scale": {
                            "measured": tiled_sel_rows,
                            "vmem_sweep": selection_vmem_sweep()},
+                       "ann": {
+                           "sweep": ann_rows,
+                           "crossover_m": ann_crossover,
+                           "probe_curve": ann_curve,
+                           "kernel_interpret": ann_kernel_rows,
+                           "note": "DESIGN.md §11: exact fused oracle "
+                                   "vs the jitted ann path (candidate "
+                                   "generation included) on clustered "
+                                   "codes (98% within-cluster bit "
+                                   "agreement) with concentrated "
+                                   "ranking scores — the distance-"
+                                   "dominated Eq. 8 regime bucketing "
+                                   "is built for. crossover_m is the "
+                                   "smallest sweep M where ann wins "
+                                   "on CPU wall time; flop_ratio "
+                                   "(2M^2b / 2MKb) is the TPU-side "
+                                   "claim. probe_curve records recall "
+                                   "vs probes in BOTH score regimes — "
+                                   "uniform scores are intrinsically "
+                                   "non-local and recall saturates "
+                                   "below the concentrated curve; the "
+                                   "occupancy columns make every "
+                                   "speedup attributable to a "
+                                   "measured candidate count"},
                        "note": "CPU jnp wall times (fused oracle vs "
                                "unfused composition), median-of-reps "
                                "with per-rep spread recorded. lax.top_k "

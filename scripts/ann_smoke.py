@@ -1,0 +1,101 @@
+"""CI smoke for the §11 sub-quadratic ANN selection path: run
+`select_partners` with selection_backend="ann" at an M far beyond the
+exact kernels' comfortable range (the exact Gram at M=16384 is 2.7e8
+weight entries per pass; the ann candidate path prices M*K with
+K << M), and hold the path to its contracts:
+
+  * determinism — same seed, same partners (the protocol threads
+    state.round, so reselection must be reproducible);
+  * invariants at scale — self-mask, all-True sel_mask, ids in range;
+  * recall@N >= 0.9 vs the exact oracle on clustered codes at a
+    mid-size M where the oracle still runs;
+  * the prefix_bits=0 one-bucket fallback bit-exact vs the exact
+    one-shot kernel (interpret mode) AND its oracle.
+
+Usage: PYTHONPATH=src python scripts/ann_smoke.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.paper_models import FedConfig
+from repro.core import ann, backends, neighbor
+from repro.kernels import ops, ref
+from repro.kernels.selection import fused_select
+
+
+def _clustered_codes(m, bits, n_clusters, flip=0.02, seed=0):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    centers = jax.random.bernoulli(k1, 0.5, (n_clusters, bits))
+    assign = jax.random.randint(k2, (m,), 0, n_clusters)
+    flips = jax.random.bernoulli(k3, flip, (m, bits))
+    raw = jnp.logical_xor(centers[assign], flips)
+    return ops.pack_bits(jnp.where(raw, 1.0, -1.0))
+
+
+def smoke_scale(m=16384, bits=256, n=12, prefix_bits=8, probes=6):
+    """ANN selection at M=16384 — a shape whose exact path would build
+    a 16384^2 weight matrix (1 GiB f32) per round."""
+    fed = FedConfig(num_clients=m, num_neighbors=n, lsh_bits=bits,
+                    ann_prefix_bits=prefix_bits, ann_probes=probes)
+    codes = _clustered_codes(m, bits, m // 32, seed=1)
+    scores = 0.75 + 0.25 * jax.random.uniform(jax.random.PRNGKey(2), (m,))
+    k = ann.candidate_count(m, prefix_bits, probes, n, bits)
+    t0 = time.time()
+    ids, mask = jax.block_until_ready(neighbor.select_partners(
+        codes, scores, fed, backend="ann", seed=4))
+    t1 = time.time()
+    ids2, _ = neighbor.select_partners(codes, scores, fed, backend="ann",
+                                       seed=4)
+    assert bool(jnp.all(ids == ids2)), "ann reselection not deterministic"
+    assert bool(jnp.all(mask)), "teaser must keep every row served"
+    row = jnp.arange(m, dtype=jnp.int32)[:, None]
+    assert not bool(jnp.any(ids == row)), "self selected"
+    assert bool(jnp.all((ids >= 0) & (ids < m))), "id out of range"
+    print(f"ann selection M={m}: K={k} (vs exact M={m}), "
+          f"{t1 - t0:.1f}s, invariants OK")
+
+
+def smoke_recall(m=2048, bits=256, n=12):
+    codes = _clustered_codes(m, bits, m // 32, seed=3)
+    scores = 0.75 + 0.25 * jax.random.uniform(jax.random.PRNGKey(5), (m,))
+    ids_e, _ = ref.fused_select_ref(codes, scores, bits=bits, gamma=1.0,
+                                    num_neighbors=n)
+    cand = ann.ann_candidates(codes, scores, seed=6, prefix_bits=7,
+                              probes=7, num_neighbors=n)
+    ids_a, _ = ref.ann_select_ref(codes, scores, cand.ids, bits=bits,
+                                  gamma=1.0, num_neighbors=n)
+    e, a = np.asarray(ids_e), np.asarray(ids_a)
+    hits = sum(len(set(e[i]) & set(a[i])) for i in range(m))
+    recall = hits / float(m * n)
+    assert recall >= 0.9, f"recall@{n} = {recall:.3f} < 0.9"
+    print(f"ann recall M={m}: recall@{n}={recall:.3f} "
+          f"(K={cand.ids.shape[1]}) OK")
+
+
+def smoke_one_bucket(m=256, bits=128, n=12):
+    """prefix_bits=0 -> one bucket -> the ann path must be bit-exact
+    vs the exact kernels, through the public select_partners API."""
+    codes = _clustered_codes(m, bits, m // 32, seed=7)
+    scores = jax.random.uniform(jax.random.PRNGKey(8), (m,))
+    fed = FedConfig(num_clients=m, num_neighbors=n, lsh_bits=bits,
+                    ann_prefix_bits=0, ann_probes=0)
+    ids, _ = neighbor.select_partners(codes, scores, fed, backend="ann",
+                                      seed=9)
+    kw = dict(bits=bits, gamma=fed.gamma, num_neighbors=n)
+    ids_k, _ = fused_select(codes, scores, interpret=True, **kw)
+    ids_o, _ = ref.fused_select_ref(codes, scores, **kw)
+    assert bool(jnp.all(ids == ids_k)), "one-bucket != fused_select"
+    assert bool(jnp.all(ids == ids_o)), "one-bucket != oracle"
+    print(f"ann one-bucket fallback M={m}: bit-exact vs exact kernels OK")
+
+
+if __name__ == "__main__":
+    assert backends.resolve_selection(
+        "ann", 2, exact_flops=1.0, ann_flops=1.0) == "ann"
+    smoke_one_bucket()
+    smoke_recall()
+    smoke_scale()
+    print("ANN smoke OK")

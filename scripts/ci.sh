@@ -7,9 +7,12 @@
 # tiled selection/exchange in interpret mode at shapes whose one-shot
 # working set exceeds the VMEM budget) + a reduced-scale run of the
 # attack-resilience example (the in-graph ThreatModel path end-to-end,
-# attacks firing inside a gossip segment) + a 1024-client dryrun on the
-# tiled backend (the 10^4-client scaling path lowered under sharding,
-# in a fresh process because jax locks the device count at first init).
+# attacks firing inside a gossip segment) + the §11 ANN selection
+# smoke (sub-quadratic candidate path at M=16384 — beyond the exact
+# kernels' comfortable range — plus recall and the one-bucket
+# bit-exact fallback) + a 1024-client dryrun on the tiled backend
+# (the 10^4-client scaling path lowered under sharding, in a fresh
+# process because jax locks the device count at first init).
 # Usage: scripts/ci.sh [extra pytest args]
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -23,6 +26,9 @@ python benchmarks/kernel_micro.py --smoke
 
 echo "== tiled kernels beyond the one-shot VMEM budget (smoke) =="
 python scripts/tiled_smoke.py
+
+echo "== sub-quadratic ANN selection smoke (DESIGN.md §11) =="
+python scripts/ann_smoke.py
 
 echo "== attack-resilience example (smoke) =="
 python examples/attack_resilience.py --clients 6 --rounds 3 \

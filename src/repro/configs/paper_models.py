@@ -82,9 +82,22 @@ class FedConfig:
     # kernel-backed subsystem backends, one per subsystem, all resolved
     # by repro.core.backends.resolve: "kernel" runs the Pallas kernels
     # (interpret-mode off-TPU), "oracle" the bit-exact jnp twins,
-    # "auto" kernel on TPU / oracle elsewhere.
-    selection_backend: str = "auto"   # Eq. 5-8 selection (DESIGN.md §4)
+    # "auto" kernel on TPU / oracle elsewhere. Selection additionally
+    # accepts "ann" — the sub-quadratic LSH-bucket candidate index
+    # (DESIGN.md §11); "auto" opts into it past the FLOP thresholds in
+    # backends.resolve_selection.
+    selection_backend: str = "auto"   # Eq. 5-8 selection (DESIGN.md §4, §11)
     exchange_backend: str = "auto"    # Eq. 3 + §3.5 exchange (DESIGN.md §7)
+    # ANN selection knobs (DESIGN.md §11): clients sharing a seeded
+    # `ann_prefix_bits`-bit code prefix bucket together
+    # (2^prefix_bits buckets); each client additionally probes the
+    # buckets reached by flipping up to `ann_probes` single prefix
+    # bits — the standard multi-probe recall knob. prefix_bits=0
+    # collapses to ONE bucket and is pinned bit-exact vs the exact
+    # kernels. Effective values are clamped (core.ann) to the code
+    # length and to MAX_PREFIX_BITS.
+    ann_prefix_bits: int = 10
+    ann_probes: int = 8
     # kernel tiling regime, resolved by repro.core.backends
     # .resolve_tiling (DESIGN.md §10): "oneshot" holds the full working
     # set in VMEM per program (bit-exact defaults), "tiled" streams

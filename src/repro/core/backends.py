@@ -36,6 +36,17 @@ import jax
 
 BACKENDS = ("auto", "kernel", "oracle")
 TILINGS = ("auto", "oneshot", "tiled")
+# selection additionally accepts "ann" (DESIGN.md §11): the
+# sub-quadratic LSH-bucket candidate index. Exchange has no ANN
+# analogue, so plain `resolve` keeps rejecting it.
+SELECTION_BACKENDS = BACKENDS + ("ann",)
+
+# "auto" hands selection to the ANN path only when the exact kernel's
+# FLOPs exceed the candidate path's by this ratio AND the federation
+# is past the floor — below it the exact kernels are comfortably
+# VMEM/FLOP-bounded and stay bit-exact for free.
+ANN_AUTO_MIN_M = 4096
+ANN_AUTO_MIN_RATIO = 4.0
 
 # TPU v5e VMEM is ~16 MiB/core; the budget leaves headroom for the
 # compiler's own double-buffering and spills (DESIGN.md §10).
@@ -99,6 +110,56 @@ def exchange_tiled_vmem_bytes(n: int, *, block_m: int = 4, block_r: int = 8,
     tiles = block_m * (n + 1) * block_r * block_c * 4
     scratch = (4 * block_m * n * block_r + 2 * block_m * block_r) * 4
     return tiles + scratch
+
+
+def ann_vmem_bytes(bits_tot: int, *, block_m: int = 8,
+                   block_k: int = 256, nsel: int = 16) -> int:
+    """`fused_select_ann` working set per program: unpacked +-1 row
+    codes (BM * bits) and candidate codes (BM * BK * bits), the
+    (BM, BK) weight tile, and the (BM, N) running top-N scratch."""
+    unpacked = (block_m + block_m * block_k) * bits_tot * 4
+    weights = block_m * block_k * 4
+    scratch = 2 * block_m * max(nsel, 1) * 4
+    return unpacked + weights + scratch
+
+
+# ---------------------------------------------------------------------------
+# per-round FLOP estimates — the "auto" exact-vs-ann decision (§11)
+# ---------------------------------------------------------------------------
+def selection_flops(m: int, bits_tot: int) -> float:
+    """Exact selection prices every pair: one M x M +-1 Gram matmul,
+    2 * M^2 * bits FLOPs per round (tiling changes VMEM, not FLOPs)."""
+    return 2.0 * m * m * bits_tot
+
+
+def ann_selection_flops(m: int, bits_tot: int, k: int) -> float:
+    """ANN selection prices only candidates: 2 * M * K * bits, with
+    K = (probes + 1) * bucket_cap + teaser (core.ann.candidate_count)."""
+    return 2.0 * m * k * bits_tot
+
+
+def resolve_selection(backend: str, m: int, *, exact_flops: float,
+                      ann_flops: float) -> str:
+    """Resolve a selection backend to "kernel", "oracle", or "ann".
+
+    "ann" is explicit opt-in at any M. "auto" additionally routes to
+    the ANN path once the federation is big enough that the exact
+    Gram is ANN_AUTO_MIN_RATIO x the candidate path's FLOPs AND
+    m >= ANN_AUTO_MIN_M — below either threshold "auto" keeps the
+    bit-exact §10 kernels (approximation is never silent at small M).
+    """
+    if backend == "ann":
+        return "ann"
+    if backend == "auto":
+        if m >= ANN_AUTO_MIN_M and exact_flops >= ANN_AUTO_MIN_RATIO * \
+                ann_flops:
+            return "ann"
+        return resolve("auto")
+    if backend not in ("kernel", "oracle"):
+        raise ValueError(
+            f"unknown selection backend: {backend!r} "
+            f"(expected one of {SELECTION_BACKENDS})")
+    return backend
 
 
 def resolve_tiling(tiling: str, est_oneshot_bytes: int, *,

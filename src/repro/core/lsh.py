@@ -40,7 +40,11 @@ def stacked_lsh_codes(stacked_params, seed, bits: int = 256,
     may be a traced scalar. Oracle backend is bit-exact at the code
     level (tested)."""
     flat2d = ops.flatten_params_batched(stacked_params)
-    use_kernel = backends.resolve(backend) == "kernel"
+    # "ann" only changes SELECTION (candidate generation, §11); the
+    # projection itself has no approximate variant, so it resolves as
+    # "auto" there.
+    use_kernel = backends.resolve(
+        "auto" if backend == "ann" else backend) == "kernel"
     return ops.batched_lsh_codes(flat2d, seed, bits=bits,
                                  use_kernel=use_kernel)
 

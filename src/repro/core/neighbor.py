@@ -23,9 +23,10 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import backends
+from repro.core import ann, backends
 from repro.kernels import ops, ref
-from repro.kernels.selection import fused_select, fused_select_tiled
+from repro.kernels.selection import (fused_select, fused_select_ann,
+                                     fused_select_tiled)
 
 
 def selection_weights(scores, dist_norm, gamma: float, *,
@@ -54,16 +55,19 @@ def select_neighbors(weights, num_neighbors: int):
 
 
 def select_partners(codes, scores, fed, *, rng=None, backend=None,
-                    tiling=None):
+                    tiling=None, seed=0):
     """Eq. 6-8 + top-N in one call: the WPFed partner-selection step.
 
     codes: (M, W) uint32 published LSH codes; scores: (M,) f32 ranking
     scores (Eq. 7, reporter-filtered by the caller); fed: FedConfig
     (consumes num_neighbors, gamma, lsh_bits, use_lsh, use_rank,
-    selection_backend, selection_tiling). rng is required only for the
-    random ablation (use_lsh=False, use_rank=False). `backend` /
-    `tiling` override fed.selection_backend / fed.selection_tiling
-    when given.
+    selection_backend, selection_tiling, ann_prefix_bits, ann_probes).
+    rng is required only for the random ablation (use_lsh=False,
+    use_rank=False). `backend` / `tiling` override
+    fed.selection_backend / fed.selection_tiling when given. `seed`
+    (may be a traced scalar — protocol.select_phase passes
+    state.round) seeds the ANN bucket permutation; the exact paths
+    ignore it.
 
     The kernel path picks one-shot vs column-tiled from the explicit
     VMEM estimate (`backends.resolve_tiling`, DESIGN.md §10); both are
@@ -71,9 +75,17 @@ def select_partners(codes, scores, fed, *, rng=None, backend=None,
     The oracle is the jnp twin either way (CPU memory is not
     VMEM-bounded).
 
+    The "ann" path (DESIGN.md §11) restricts the exact Eq. 6-8
+    weighting to LSH-bucket candidate sets — O(M*K*bits) instead of
+    O(M^2*bits). "auto" opts into it only past the FLOP thresholds in
+    `backends.resolve_selection`, so approximation is never silent at
+    small M.
+
     Returns (ids (M, N) int32, sel_mask (M, N) bool). With N <= M-1
     every selected id is a real, non-self client and the mask is all
-    True; the mask exists for degenerate M <= 1 federations.
+    True; the mask exists for degenerate M <= 1 federations (and, on
+    the ann path, for rows whose candidate set ran dry — the score
+    teaser makes that impossible for M >= 2).
     """
     m = codes.shape[0]
     n = min(fed.num_neighbors, m - 1)
@@ -82,7 +94,31 @@ def select_partners(codes, scores, fed, *, rng=None, backend=None,
                               fed.gamma, use_lsh=False, use_rank=False,
                               rng=rng)
         return select_neighbors(w, n)
-    resolved = backends.resolve(backend or fed.selection_backend)
+    bits_tot = codes.shape[1] * 32
+    k = ann.candidate_count(m, fed.ann_prefix_bits, fed.ann_probes, n,
+                            bits_tot)
+    resolved = backends.resolve_selection(
+        backend or fed.selection_backend, m,
+        exact_flops=backends.selection_flops(m, bits_tot),
+        ann_flops=backends.ann_selection_flops(m, bits_tot, k))
+    if resolved == "ann":
+        # tiling strings stay validated even though the ann kernel has
+        # exactly one (streaming) layout
+        backends.resolve_tiling(tiling or fed.selection_tiling, 0)
+        cand = ann.ann_candidates(
+            codes, scores, seed=seed, prefix_bits=fed.ann_prefix_bits,
+            probes=fed.ann_probes, num_neighbors=n)
+        if backends.resolve("auto") == "kernel":
+            ids, top_w = fused_select_ann(
+                codes, scores, cand.ids, bits=fed.lsh_bits,
+                gamma=fed.gamma, num_neighbors=n, use_lsh=fed.use_lsh,
+                use_rank=fed.use_rank, interpret=backends.interpret())
+        else:
+            ids, top_w = ref.ann_select_ref(
+                codes, scores, cand.ids, bits=fed.lsh_bits,
+                gamma=fed.gamma, num_neighbors=n, use_lsh=fed.use_lsh,
+                use_rank=fed.use_rank)
+        return ids, jnp.isfinite(top_w)
     if resolved == "kernel":
         bits_tot = codes.shape[1] * 32
         resolved_tiling = backends.resolve_tiling(

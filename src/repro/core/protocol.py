@@ -88,7 +88,11 @@ def select_phase(state: FedState, fed: FedConfig, *,
     """Steps 1-3: §3.6 reveal verification -> Eq. 7 ranking scores ->
     fused Eq. 6-8 top-N partner selection (DESIGN.md §4). `rng` is
     consumed only by the random-selection ablation (use_lsh=False,
-    use_rank=False)."""
+    use_rank=False). The ANN bucket permutation (selection_backend
+    "ann", DESIGN.md §11) is seeded from state.round — the same
+    per-round discipline as the LSH projection seed in announce_phase,
+    so reselection is reproducible, scan-safe, and recomputable by
+    every peer from public information."""
     m = fed.num_clients
     if fed.rank_verification:
         reporter_mask = verify.verify_rankings_fnv(
@@ -100,7 +104,8 @@ def select_phase(state: FedState, fed: FedConfig, *,
         m, fed.top_k, dedupe=fed.dedupe_rankings)
     ids, sel_mask = neighbor.select_partners(
         state.codes, scores, fed,
-        rng=rng if not (fed.use_lsh or fed.use_rank) else None)
+        rng=rng if not (fed.use_lsh or fed.use_rank) else None,
+        seed=state.round)
     return SelectResult(ids, sel_mask, scores, reporter_mask)
 
 

@@ -61,6 +61,51 @@ def fused_select_ref(codes, scores, *, bits: int, gamma: float,
     return top_i.astype(jnp.int32), top_w
 
 
+def ann_select_ref(codes, scores, cand_ids, *, bits: int, gamma: float,
+                   num_neighbors: int, use_lsh: bool = True,
+                   use_rank: bool = True):
+    """Twin of `kernels.selection.fused_select_ann` (DESIGN.md §11):
+    exact XOR+popcount distances and Eq. 8 LUT weights computed only
+    on the (M, K) candidate sets from `core.ann` (sentinel id M in
+    invalid slots), then one lax.top_k over the candidate axis.
+
+    Bit-exact against the kernel: distances are the same exact
+    integers, the LUT entries are jnp.exp on the same inputs the
+    kernel's elementwise exp sees (the `fused_select_ref` argument),
+    and top_k's first-max tie-breaking by candidate position matches
+    the kernel's running-candidates-first knockout merge. Slots with
+    no finite candidate get id 0 / weight -inf, same as the kernel's
+    clamp. This is also the CPU-fast ANN path `core.neighbor`
+    dispatches to off-TPU.
+    """
+    m = codes.shape[0]
+    nsel = min(num_neighbors, m - 1)
+    if nsel <= 0:
+        return (jnp.zeros((m, 0), jnp.int32), jnp.zeros((m, 0), jnp.float32))
+    cand = cand_ids.astype(jnp.int32)
+    codes_pad = jnp.concatenate(
+        [codes, jnp.zeros((1, codes.shape[1]), codes.dtype)], axis=0)
+    cand_codes = codes_pad[cand]                       # (M, K, W)
+    d = jnp.sum(popcount_u32(codes[:, None, :] ^ cand_codes), axis=-1)
+    if use_rank:
+        scores_pad = jnp.concatenate(
+            [scores.astype(jnp.float32), jnp.zeros((1,), jnp.float32)])
+        w = scores_pad[cand]
+    else:
+        w = jnp.ones(cand.shape, jnp.float32)
+    if use_lsh:
+        dmax = codes.shape[1] * 32
+        table = jnp.exp(-gamma * (
+            jnp.arange(dmax + 1, dtype=jnp.float32) / float(bits)))
+        w = w * table[d]
+    row = jnp.arange(m, dtype=jnp.int32)[:, None]
+    w = jnp.where((cand == row) | (cand >= m), -jnp.inf, w)
+    top_w, pos = jax.lax.top_k(w, nsel)
+    ids = jnp.take_along_axis(cand, pos, axis=1)
+    return (jnp.where(jnp.isfinite(top_w), ids, 0).astype(jnp.int32),
+            top_w)
+
+
 def all_in_one_exchange_ref(own_logits, neighbor_logits, y_ref, sel_mask,
                             *, lsh_verification: bool = True):
     """Oracle for the fused exchange kernel (WPFed Eq. 3 + §3.5 + the

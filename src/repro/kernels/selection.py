@@ -68,6 +68,8 @@ from jax.experimental import pallas as pl
 BM_SEL = 8          # row block (f32 sublane width)
 BM_SEL_TILED = 128  # row block of the column-tiled kernel
 BK_SEL = 512        # column tile of the column-tiled kernel
+BM_ANN = 8          # row block of the ANN candidate kernel
+BK_ANN = 256        # candidate tile of the ANN kernel (VMEM ~2 MB)
 
 
 def unpack_pm1(words):
@@ -78,6 +80,24 @@ def unpack_pm1(words):
     shifts = jax.lax.broadcasted_iota(jnp.uint32, (r, w, 32), 2)
     bits01 = ((words[:, :, None] >> shifts) & jnp.uint32(1))
     return (2.0 * bits01.astype(jnp.float32) - 1.0).reshape(r, w * 32)
+
+
+def _eq8_weights(d, s, row_ids, col_ids, *, bits: int, gamma: float,
+                 m_real: int, use_lsh: bool, use_rank: bool):
+    """Eq. 8 weighting + self/padding mask on a tile of exact integer
+    distances. Shared VERBATIM by the dense kernels (via
+    `_gram_weights`) and the ANN candidate kernel, so weights are
+    bit-identical wherever the same (d, s) pair appears. `col_ids >=
+    m_real` also masks the ANN path's sentinel candidate ids."""
+    shape = d.shape
+    if use_rank:
+        w = jnp.broadcast_to(s, shape)
+    else:
+        w = jnp.ones(shape, jnp.float32)
+    if use_lsh:
+        w = w * jnp.exp(-gamma * (d / float(bits)))
+    return jnp.where((col_ids == row_ids) | (col_ids >= m_real),
+                     -jnp.inf, w)
 
 
 def _gram_weights(a_words, b_words, s_row, row0, col0, *, bits: int,
@@ -92,16 +112,11 @@ def _gram_weights(a_words, b_words, s_row, row0, col0, *, bits: int,
     d = (float(bits_tot) - gram) * 0.5                # exact integer f32
 
     bm, bk = d.shape
-    if use_rank:
-        w = jnp.broadcast_to(s_row, (bm, bk))
-    else:
-        w = jnp.ones((bm, bk), jnp.float32)
-    if use_lsh:
-        w = w * jnp.exp(-gamma * (d / float(bits)))
-
     col = col0 + jax.lax.broadcasted_iota(jnp.int32, (bm, bk), 1)
     row = row0 + jax.lax.broadcasted_iota(jnp.int32, (bm, bk), 0)
-    return jnp.where((col == row) | (col >= m_real), -jnp.inf, w), col
+    w = _eq8_weights(d, s_row, row, col, bits=bits, gamma=gamma,
+                     m_real=m_real, use_lsh=use_lsh, use_rank=use_rank)
+    return w, col
 
 
 def _knockout_topn(cand_v, cand_i, nsel: int):
@@ -255,3 +270,128 @@ def fused_select_tiled(codes, scores, *, bits: int, gamma: float,
         interpret=interpret,
     )(rows, cols, scores_p)
     return ids[:m], top_w[:m]
+
+
+def _select_ann_kernel(a_ref, c_ref, ci_ref, cs_ref, ids_ref, w_ref,
+                       vals_scr, ids_scr, *, bits: int, gamma: float,
+                       nsel: int, m_real: int, use_lsh: bool,
+                       use_rank: bool, bm: int, bk: int, nj: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        vals_scr[...] = jnp.full_like(vals_scr, -jnp.inf)
+        ids_scr[...] = jnp.zeros_like(ids_scr)
+
+    row0 = pl.program_id(0) * bm
+    ua = unpack_pm1(a_ref[...])                       # (BM, bits_tot)
+    cw = c_ref[...]                                   # (BM, BK, W)
+    w_words = cw.shape[-1]
+    uc = unpack_pm1(cw.reshape(bm * bk, w_words)).reshape(bm, bk, -1)
+    bits_tot = ua.shape[1]
+    # per-row batched Gram: each row block has its OWN candidate codes,
+    # so the contraction batches over the row axis instead of sharing
+    # one ±1 matrix. Distances stay exact integers in f32 (§4).
+    gram = jax.lax.dot_general(
+        ua, uc, (((1,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)           # (BM, BK)
+    d = (float(bits_tot) - gram) * 0.5
+    row = row0 + jax.lax.broadcasted_iota(jnp.int32, (bm, bk), 0)
+    col = ci_ref[...]                                 # gathered global ids
+    w = _eq8_weights(d, cs_ref[...], row, col, bits=bits, gamma=gamma,
+                     m_real=m_real, use_lsh=use_lsh, use_rank=use_rank)
+    # §10 knockout merge, running candidates FIRST: earlier candidate
+    # tiles hold earlier candidate positions, so first-max argmax
+    # reproduces lax.top_k's tie-breaking over the full candidate axis
+    # (and, in the one-bucket fallback where candidates are ascending
+    # client ids, over the full client axis — the bit-exact case).
+    cand_v = jnp.concatenate([vals_scr[...], w], axis=1)
+    cand_i = jnp.concatenate([ids_scr[...], col], axis=1)
+    vals, ids = _knockout_topn(cand_v, cand_i, nsel)
+    vals_scr[...] = vals
+    ids_scr[...] = ids
+
+    @pl.when(j == nj - 1)
+    def _finalize():
+        ids_ref[...] = ids_scr[...]
+        w_ref[...] = vals_scr[...]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "bits", "gamma", "num_neighbors", "use_lsh", "use_rank", "interpret",
+    "block_m", "block_k"))
+def fused_select_ann(codes, scores, cand_ids, *, bits: int, gamma: float,
+                     num_neighbors: int, use_lsh: bool = True,
+                     use_rank: bool = True, interpret: bool = True,
+                     block_m: int = BM_ANN, block_k: int = BK_ANN):
+    """ANN candidate selection (DESIGN.md §11): exact Eq. 6-8 weights
+    computed ONLY on `cand_ids` (the (M, K) per-client candidate sets
+    from core.ann — bucket tiles + score teaser, sentinel id M in
+    invalid slots), streamed in (block_m, block_k) tiles with the §10
+    running top-N knockout merge. O(M*K*bits) FLOPs instead of
+    O(M^2*bits); VMEM per program is O(tile).
+
+    Bit-exact against `ref.ann_select_ref` on the same candidate sets
+    (same exact integer distances, same exp inputs, same tie-breaking
+    by candidate position), and — because the one-bucket fallback
+    makes the candidate set every client in ascending id order —
+    bit-exact against `fused_select` / `fused_select_ref` when
+    `core.ann` is run with prefix_bits=0 (pinned in tests).
+
+    Returns (ids (M, N) int32, top_w (M, N) f32); slots with no finite
+    candidate get id 0 and weight -inf (callers mask on isfinite, as
+    with the exact path's degenerate shapes).
+    """
+    m, w = codes.shape
+    k = cand_ids.shape[1]
+    nsel = min(num_neighbors, m - 1)
+    if nsel <= 0:                       # degenerate M <= 1 federation
+        return (jnp.zeros((m, 0), jnp.int32), jnp.zeros((m, 0), jnp.float32))
+    import jax.experimental.pallas.tpu as pltpu
+    bm = block_m
+    pm = (-m) % bm
+    bk = min(block_k, k + (-k) % 128)             # small-K: one tile
+    pk = (-k) % bk
+    # gather candidate codes/scores OUTSIDE the kernel (XLA gather);
+    # the sentinel id M hits the appended zero row / zero score and is
+    # masked to -inf in-kernel via col >= m_real, like padded columns.
+    cand_p = jnp.pad(cand_ids.astype(jnp.int32), ((0, pm), (0, pk)),
+                     constant_values=m)
+    codes_pad = jnp.concatenate(
+        [codes, jnp.zeros((1, w), codes.dtype)], axis=0)
+    scores_pad = jnp.concatenate(
+        [scores.astype(jnp.float32), jnp.zeros((1,), jnp.float32)])
+    cand_codes = codes_pad[cand_p]                # (MR, KP, W)
+    cand_scores = scores_pad[cand_p]              # (MR, KP)
+    rows = jnp.pad(codes, ((0, pm), (0, 0)))
+    mr, kp = m + pm, k + pk
+    nj = kp // bk
+    ids, top_w = pl.pallas_call(
+        functools.partial(_select_ann_kernel, bits=bits, gamma=gamma,
+                          nsel=nsel, m_real=m, use_lsh=use_lsh,
+                          use_rank=use_rank, bm=bm, bk=bk, nj=nj),
+        grid=(mr // bm, nj),                      # candidate tiles innermost
+        in_specs=[
+            pl.BlockSpec((bm, w), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, bk, w), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((bm, bk), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bk), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, nsel), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, nsel), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((mr, nsel), jnp.int32),
+            jax.ShapeDtypeStruct((mr, nsel), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bm, nsel), jnp.float32),
+            pltpu.VMEM((bm, nsel), jnp.int32),
+        ],
+        interpret=interpret,
+    )(rows, cand_codes, cand_p, cand_scores)
+    ids, top_w = ids[:m], top_w[:m]
+    # no-finite-candidate slots: pin the id to 0 (matches the twin's
+    # clamp) so downstream gathers stay in range; sel_mask is False.
+    return jnp.where(jnp.isfinite(top_w), ids, 0), top_w

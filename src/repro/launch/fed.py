@@ -64,9 +64,12 @@ def run_federation(dataset: str = "mnist", rounds: int = 10,
                    tiling: str = "auto", schedule: str = "sync",
                    reselect_every: int = 0, attack: str = "none",
                    attack_frac: float = 0.5, attack_start: int = -1,
+                   ann_prefix_bits: int = -1, ann_probes: int = -1,
                    log=print):
     """`backend` drives BOTH kernel-backed subsystems (selection and
-    exchange — one flag, resolved by repro.core.backends.resolve), and
+    exchange — one flag, resolved by repro.core.backends.resolve;
+    "ann" applies to selection only and leaves exchange on "auto" —
+    DESIGN.md §11), and
     `tiling` both VMEM regimes (resolve_tiling, DESIGN.md §10).
     An explicit `fed` config wins outright: backend/ref_mode/tiling
     apply only to the default-constructed config (asserted, not
@@ -82,20 +85,28 @@ def run_federation(dataset: str = "mnist", rounds: int = 10,
     (state, history).
     """
     if fed is not None and (backend != "auto" or ref_mode != "personal"
-                            or tiling != "auto"):
-        raise ValueError("pass backend/ref_mode/tiling inside the explicit "
-                         "FedConfig, not alongside it")
+                            or tiling != "auto" or ann_prefix_bits >= 0
+                            or ann_probes >= 0):
+        raise ValueError("pass backend/ref_mode/tiling/ann knobs inside "
+                         "the explicit FedConfig, not alongside it")
     sched = resolve_schedule(schedule, reselect_every)
     ds_fn = DATASETS[dataset]
     ds = ds_fn(seed=seed) if num_clients == 0 else \
         ds_fn(num_clients=num_clients, seed=seed)
     n_opt, alpha, gamma = PAPER_FED_OPTIMA[dataset]
+    defaults = FedConfig()
     fed = fed or FedConfig(num_clients=ds.num_clients, num_neighbors=n_opt,
                            alpha=alpha, gamma=gamma, rounds=rounds,
                            selection_backend=backend,
-                           exchange_backend=backend, ref_mode=ref_mode,
+                           exchange_backend="auto" if backend == "ann"
+                           else backend, ref_mode=ref_mode,
                            selection_tiling=tiling, exchange_tiling=tiling,
-                           dedupe_rankings=recommended_dedupe(ref_mode))
+                           dedupe_rankings=recommended_dedupe(ref_mode),
+                           ann_prefix_bits=ann_prefix_bits
+                           if ann_prefix_bits >= 0
+                           else defaults.ann_prefix_bits,
+                           ann_probes=ann_probes if ann_probes >= 0
+                           else defaults.ann_probes)
     mcfg = MODEL_FOR[dataset]()
     apply_fn = functools.partial(apply_client_model, mcfg)
     init_fn = lambda k: init_client_model(mcfg, k)
@@ -157,7 +168,9 @@ def dryrun_fed_round(num_clients: int = 256, arch: str = "phi3-medium-14b",
     cfg = get_config(arch).reduced()
     fed = FedConfig(num_clients=num_clients, num_neighbors=8, top_k=4,
                     local_steps=1, lsh_bits=128, ref_batch=8,
-                    selection_backend=backend, exchange_backend=backend,
+                    selection_backend=backend,
+                    exchange_backend="kernel" if backend == "ann"
+                    else backend,
                     ref_mode=ref_mode, selection_tiling=tiling,
                     exchange_tiling=tiling,
                     dedupe_rankings=recommended_dedupe(ref_mode))
@@ -233,9 +246,18 @@ def main(argv=None):
     ap.add_argument("--dryrun", action="store_true",
                     help="lower a 256-client WPFed segment on the 16x16 mesh")
     ap.add_argument("--backend", default="auto",
-                    choices=["auto", "kernel", "oracle"],
+                    choices=["auto", "kernel", "oracle", "ann"],
                     help="kernel-backed subsystem backend — drives both "
-                         "selection AND exchange (DESIGN.md §4, §7)")
+                         "selection AND exchange (DESIGN.md §4, §7); "
+                         "'ann' switches SELECTION to the sub-quadratic "
+                         "LSH-bucket candidate index (DESIGN.md §11) and "
+                         "leaves exchange on auto")
+    ap.add_argument("--ann-prefix-bits", type=int, default=-1,
+                    help="ANN bucket prefix length (-1 = FedConfig "
+                         "default; 0 = one-bucket exact fallback)")
+    ap.add_argument("--ann-probes", type=int, default=-1,
+                    help="ANN multi-probe bit flips — the recall knob "
+                         "(-1 = FedConfig default)")
     ap.add_argument("--ref-mode", default="personal",
                     choices=["personal", "public"],
                     help="personal: each client's own reference set "
@@ -275,7 +297,7 @@ def main(argv=None):
         sched = resolve_schedule(args.schedule, args.reselect_every)
         dryrun_fed_round(num_clients=args.clients or 256,
                          backend="kernel" if args.backend == "auto"
-                         else args.backend,
+                         else args.backend,  # "ann" lowers the ann path
                          ref_mode=args.ref_mode, tiling=args.tiling,
                          reselect_every=sched.reselect_every,
                          attack=args.attack, attack_frac=args.attack_frac,
@@ -290,7 +312,9 @@ def main(argv=None):
                                 reselect_every=args.reselect_every,
                                 attack=args.attack,
                                 attack_frac=args.attack_frac,
-                                attack_start=args.attack_start)
+                                attack_start=args.attack_start,
+                                ann_prefix_bits=args.ann_prefix_bits,
+                                ann_probes=args.ann_probes)
     print(json.dumps(history[-3:], indent=1))
 
 
