@@ -13,10 +13,16 @@
 # bit-exact fallback) + a 1024-client dryrun on the tiled backend
 # (the 10^4-client scaling path lowered under sharding, in a fresh
 # process because jax locks the device count at first init).
+# The static-analysis gate (DESIGN.md §12) runs FIRST: kernel-contract
+# verification + trace-safety lint are cheap (no kernel executes) and
+# catch the §10/§4 bug classes before the test tiers spend minutes.
 # Usage: scripts/ci.sh [extra pytest args]
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== static analysis: kernel contracts + trace lint =="
+python -m repro.analysis --strict --json benchmarks/ANALYSIS_report.json
 
 echo "== tier-1: pytest =="
 python -m pytest -x -q "$@"

@@ -1,0 +1,23 @@
+"""Static-analysis subsystem: kernel contracts + trace-safety lint.
+
+Two layers (DESIGN.md §12), one CLI (`python -m repro.analysis`):
+
+  * `registry` / `kernel_contracts` — a contract registry entry per
+    Pallas kernel (wrapper fn, jnp oracle twin in `kernels/ref.py`,
+    VMEM estimator in `core/backends.py`, exactness class) and an
+    abstract interpreter over each pallas_call site's grid +
+    BlockSpecs: output-tile coverage, undeclared output revisits
+    (write races), block/arity consistency, and estimator
+    truthfulness at representative shapes.
+  * `trace_lint` — AST lint over `core/`, `kernels/`, `launch/` for
+    host-side casts on traced values, Python `if` on traced booleans,
+    constant PRNG keys in traced code, and host-sync call patterns
+    (exempted case-by-case via `# analysis: host-ok`).
+
+This package deliberately keeps `registry` import-light (stdlib only)
+so the kernel modules can attach their contract entries at import time
+without a cycle; everything heavier (jax, the checkers) lives behind
+function-level imports in the sibling modules.
+"""
+from repro.analysis.registry import REGISTRY, kernel_contract  # noqa: F401
+from repro.analysis.report import Finding  # noqa: F401

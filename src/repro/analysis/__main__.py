@@ -1,0 +1,123 @@
+"""CLI: `python -m repro.analysis [--strict] [--json PATH] [paths...]`.
+
+With no paths: verify every registered kernel contract (importing the
+kernel modules populates the registry) and lint `src/repro/{core,
+kernels,launch}`. With paths: lint those files/directories instead,
+and additionally contract-check any `kernel_contract(` registrations
+the given .py files make at import time (this is how the seeded-bad
+fixtures under tests/analysis_fixtures/ are driven, in isolation from
+the HEAD registry).
+
+Exit status: 0 when clean; 1 when any error-severity finding exists
+(`--strict` promotes everything, warnings included). `--json PATH`
+additionally writes the diffable rule->count->location payload
+(benchmarks/ANALYSIS_report.json in CI).
+"""
+from __future__ import annotations
+
+import argparse
+import importlib.util
+import os
+import sys
+from typing import List, Optional
+
+from repro.analysis.registry import capture_registrations
+from repro.analysis.report import Finding, render_json, render_text
+
+DEFAULT_LINT_DIRS = ("core", "kernels", "launch")
+
+
+def _default_lint_paths() -> List[str]:
+    # .../src/repro, from .../src/repro/analysis/__main__.py
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    return [os.path.join(root, d) for d in DEFAULT_LINT_DIRS]
+
+
+def _has_registrations(path: str) -> bool:
+    try:
+        with open(path, "r", encoding="utf-8") as fh:
+            return "kernel_contract(" in fh.read()
+    except OSError:
+        return False
+
+
+def _check_module_file(path: str) -> List[Finding]:
+    """Import one .py file in isolation and contract-check whatever it
+    registers (fixture driver)."""
+    from repro.analysis.kernel_contracts import check_entries
+    name = "_analysis_target_" + \
+        os.path.splitext(os.path.basename(path))[0]
+    with capture_registrations() as entries:
+        spec = importlib.util.spec_from_file_location(name, path)
+        mod = importlib.util.module_from_spec(spec)
+        try:
+            spec.loader.exec_module(mod)
+        except Exception as e:  # a fixture that cannot import is a finding
+            return [Finding("block-mismatch", path, 1,
+                            f"import failed: {e}")]
+    return check_entries(entries)
+
+
+def run(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="kernel-contract checker + trace-safety lint")
+    ap.add_argument("paths", nargs="*",
+                    help="files/dirs to analyze (default: the HEAD "
+                         "kernel registry + src/repro/{core,kernels,"
+                         "launch})")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit non-zero on ANY finding (CI gate)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write the JSON report to PATH")
+    args = ap.parse_args(argv)
+
+    from repro.analysis.trace_lint import lint_paths
+
+    findings: List[Finding] = []
+    checked: List[str] = []
+    if args.paths:
+        lint_targets = list(args.paths)
+        for p in args.paths:
+            files = []
+            if os.path.isdir(p):
+                for root, dirs, names in os.walk(p):
+                    dirs[:] = [d for d in dirs if d != "__pycache__"]
+                    files += [os.path.join(root, f)
+                              for f in sorted(names)
+                              if f.endswith(".py")]
+            elif p.endswith(".py"):
+                files.append(p)
+            for f in files:
+                if _has_registrations(f):
+                    checked.append(f)
+                    findings.extend(_check_module_file(f))
+    else:
+        from repro.analysis.kernel_contracts import (check_entries,
+                                                     head_entries)
+        entries = head_entries()
+        checked = [e.name for e in entries]
+        findings.extend(check_entries(entries))
+        lint_targets = _default_lint_paths()
+
+    findings.extend(lint_paths(lint_targets))
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+
+    print(render_text(findings))
+    if args.json:
+        payload = render_json(findings, strict=args.strict,
+                              checked_entries=checked,
+                              linted_paths=[os.path.relpath(p)
+                                            for p in lint_targets])
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        with open(args.json, "w", encoding="utf-8") as fh:
+            fh.write(payload + "\n")
+        print(f"report written to {args.json}")
+
+    if args.strict:
+        return 1 if findings else 0
+    return 1 if any(f.severity == "error" for f in findings) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(run())

@@ -1,0 +1,291 @@
+"""Layer 1: abstract interpretation of Pallas launch contracts.
+
+For every registered kernel (see `registry.kernel_contract`) and every
+representative shape point, this module captures the actual
+`pl.pallas_call` parameters (grid, BlockSpecs, out_shape, scratch) and
+verifies the contracts a machine can check (DESIGN.md §12):
+
+  (a) output-tile coverage — enumerating the grid and evaluating each
+      output BlockSpec's index map (a plain Python function of the
+      grid indices) must tile every output array with no gaps, no
+      out-of-bounds blocks, and no two grid points writing the same
+      block except along axes the entry DECLARES as revisit
+      (accumulation) axes. Input revisits ("the lsh seed") are always
+      legal and never checked.
+  (b) block/arity consistency — BlockSpec rank and divisibility
+      against the actual operands, out_specs against out_shape, and
+      the kernel body's positional signature against
+      n_inputs + n_outputs + n_scratch.
+  (c) estimator truthfulness — the VMEM bytes implied by the captured
+      block shapes (blocks + the entry's declared intermediate model)
+      must match the estimator registered in
+      `core.backends.VMEM_ESTIMATORS` within the declared slack, so
+      `resolve_tiling("auto")` can never silently drift from the
+      kernels it budgets for (§10's drift bug class).
+
+Also checked per entry: the declared oracle twin exists in
+`kernels/ref.py`, the declared estimator is registered, and the number
+of captured sites matches the declaration.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import itertools
+import math
+from typing import List, Optional
+
+from repro.analysis.registry import (REGISTRY, CapturedSite, KernelEntry,
+                                     capture_sites, unjitted)
+from repro.analysis.report import Finding
+
+# kernel modules whose import populates REGISTRY
+KERNEL_MODULES = (
+    "repro.kernels.lsh_projection",
+    "repro.kernels.hamming",
+    "repro.kernels.selection",
+    "repro.kernels.exchange",
+    "repro.kernels.flash_attention",
+)
+
+
+def head_entries() -> List[KernelEntry]:
+    import importlib
+    for mod in KERNEL_MODULES:
+        importlib.import_module(mod)
+    return [REGISTRY[k] for k in sorted(REGISTRY)]
+
+
+def _entry_loc(entry: KernelEntry):
+    fn = unjitted(entry.fn)
+    code = getattr(fn, "__code__", None)
+    if code is None:
+        return entry.module, 1
+    return code.co_filename, code.co_firstlineno
+
+
+def _itemsize(dtype) -> int:
+    import numpy as np
+    return np.dtype(dtype).itemsize
+
+
+def _block_bytes(block_shape, dtype) -> int:
+    return math.prod(int(b) for b in block_shape) * _itemsize(dtype)
+
+
+def _scratch_bytes(s) -> int:
+    shape = getattr(s, "shape", None)
+    dtype = getattr(s, "dtype", None)
+    if shape is None or dtype is None:
+        return 0
+    return _block_bytes(shape, dtype)
+
+
+def _kernel_positional_arity(kernel_fn) -> Optional[int]:
+    """Positional parameter count of the (possibly functools.partial-
+    bound) kernel body — partial-bound keywords are keyword-only in
+    the underlying def, so counting positional kinds is exact."""
+    fn = kernel_fn
+    while isinstance(fn, functools.partial):
+        fn = fn.func
+    try:
+        sig = inspect.signature(fn)
+    except (TypeError, ValueError):
+        return None
+    return sum(1 for p in sig.parameters.values()
+               if p.kind in (p.POSITIONAL_ONLY, p.POSITIONAL_OR_KEYWORD))
+
+
+def _check_site_blocks(entry: KernelEntry, site: CapturedSite,
+                       path: str, line: int) -> List[Finding]:
+    """(b) block/arity consistency for one captured launch."""
+    out: List[Finding] = []
+
+    def bad(msg):
+        out.append(Finding("block-mismatch", path, line,
+                           f"{entry.name}: {msg}"))
+
+    arity = _kernel_positional_arity(site.kernel_fn)
+    expected = (len(site.in_specs) + len(site.out_specs)
+                + len(site.scratch_shapes))
+    if arity is not None and arity != expected:
+        bad(f"kernel body takes {arity} positional refs but the launch "
+            f"binds {len(site.in_specs)} inputs + {len(site.out_specs)} "
+            f"outputs + {len(site.scratch_shapes)} scratch = {expected}")
+
+    if len(site.in_specs) != len(site.operands):
+        bad(f"{len(site.in_specs)} in_specs for "
+            f"{len(site.operands)} operands")
+    for k, (spec, op) in enumerate(zip(site.in_specs, site.operands)):
+        bs = tuple(spec.block_shape)
+        if len(bs) != len(op.shape):
+            bad(f"in_specs[{k}] block rank {len(bs)} != operand rank "
+                f"{len(op.shape)} (block {bs}, operand {op.shape})")
+            continue
+        for d, (b, s) in enumerate(zip(bs, op.shape)):
+            if b is None:
+                continue
+            if b > s or s % b != 0:
+                bad(f"in_specs[{k}] block {bs} does not evenly tile "
+                    f"operand {tuple(op.shape)} (dim {d})")
+                break
+
+    if len(site.out_specs) != len(site.out_shapes):
+        bad(f"{len(site.out_specs)} out_specs for "
+            f"{len(site.out_shapes)} out_shapes")
+    for k, (spec, os) in enumerate(zip(site.out_specs, site.out_shapes)):
+        bs = tuple(spec.block_shape)
+        if len(bs) != len(os.shape):
+            bad(f"out_specs[{k}] block rank {len(bs)} != out_shape rank "
+                f"{len(os.shape)} (block {bs}, out {tuple(os.shape)})")
+            continue
+        for d, (b, s) in enumerate(zip(bs, os.shape)):
+            if b is None:
+                continue
+            if b > s or s % b != 0:
+                bad(f"out_specs[{k}] block {bs} does not evenly tile "
+                    f"out_shape {tuple(os.shape)} (dim {d})")
+                break
+    return out
+
+
+def _check_site_coverage(entry: KernelEntry, site: CapturedSite,
+                         revisit_axes, path: str, line: int
+                         ) -> List[Finding]:
+    """(a) output-tile coverage / race / bounds for one launch."""
+    out: List[Finding] = []
+    grid = site.grid
+    if not grid:
+        return out
+    grid_points = list(itertools.product(*[range(g) for g in grid]))
+    for k, (spec, os) in enumerate(zip(site.out_specs, site.out_shapes)):
+        bs = tuple(spec.block_shape)
+        if len(bs) != len(os.shape) or any(b is None for b in bs):
+            continue  # already reported by the block check
+        nblocks = tuple(-(-s // b) for s, b in zip(os.shape, bs))
+        seen = {}
+        oob = False
+        for pt in grid_points:
+            bi = spec.index_map(*pt)
+            bi = tuple(int(x) for x in (
+                bi if isinstance(bi, (tuple, list)) else (bi,)))
+            if len(bi) != len(nblocks) or any(
+                    i < 0 or i >= n for i, n in zip(bi, nblocks)):
+                if not oob:
+                    out.append(Finding(
+                        "tile-oob", path, line,
+                        f"{entry.name}: out_specs[{k}] maps grid point "
+                        f"{pt} to block {bi}, outside the "
+                        f"{nblocks}-block output"))
+                    oob = True
+                continue
+            reduced = tuple(0 if a in revisit_axes else pt[a]
+                            for a in range(len(grid)))
+            seen.setdefault(bi, set()).add(reduced)
+        if oob:
+            continue
+        missing = [b for b in itertools.product(*[range(n) for n in nblocks])
+                   if b not in seen]
+        if missing:
+            out.append(Finding(
+                "tile-gap", path, line,
+                f"{entry.name}: out_specs[{k}] never writes "
+                f"{len(missing)}/{math.prod(nblocks)} output blocks "
+                f"(first missing: {missing[0]}, grid {grid})"))
+        raced = [b for b, pts in seen.items() if len(pts) > 1]
+        if raced:
+            out.append(Finding(
+                "tile-race", path, line,
+                f"{entry.name}: out_specs[{k}] block {raced[0]} is "
+                f"written by {len(seen[raced[0]])} grid points outside "
+                f"the declared revisit axes {tuple(revisit_axes)} "
+                f"(grid {grid})"))
+    return out
+
+
+def _implied_vmem_bytes(entry: KernelEntry, site: CapturedSite,
+                        point: dict) -> int:
+    """Per-program VMEM implied by the captured launch: input blocks +
+    output blocks + scratch + the entry's declared intermediate model
+    (unpack expansions, weight tiles) computed from the same captured
+    block shapes."""
+    total = 0
+    for spec, op in zip(site.in_specs, site.operands):
+        total += _block_bytes(
+            [b for b in spec.block_shape if b is not None], op.dtype)
+    for spec, os in zip(site.out_specs, site.out_shapes):
+        total += _block_bytes(
+            [b for b in spec.block_shape if b is not None], os.dtype)
+    for s in site.scratch_shapes:
+        total += _scratch_bytes(s)
+    if entry.vmem_extra is not None:
+        total += int(entry.vmem_extra(site, point))
+    return total
+
+
+def _resolve_estimator(entry: KernelEntry):
+    """Estimator declared as a name in core.backends.VMEM_ESTIMATORS
+    (the introspection hook) or directly as a callable (fixtures)."""
+    if entry.estimator is None:
+        return None, None
+    if callable(entry.estimator):
+        return entry.estimator, None
+    from repro.core import backends
+    est = backends.VMEM_ESTIMATORS.get(entry.estimator)
+    if est is None:
+        return None, Finding(
+            "estimator-missing", *_entry_loc(entry),
+            f"{entry.name}: estimator {entry.estimator!r} is not "
+            f"registered in core.backends.VMEM_ESTIMATORS")
+    return est, None
+
+
+def check_entry(entry: KernelEntry) -> List[Finding]:
+    """All contract checks for one registry entry at all its points."""
+    path, line = _entry_loc(entry)
+    out: List[Finding] = []
+
+    if entry.oracle is not None:
+        from repro.kernels import ref
+        if not hasattr(ref, entry.oracle):
+            out.append(Finding(
+                "oracle-missing", path, line,
+                f"{entry.name}: oracle {entry.oracle!r} not found in "
+                f"kernels/ref.py"))
+
+    estimator, est_finding = _resolve_estimator(entry)
+    if est_finding is not None:
+        out.append(est_finding)
+
+    for point in entry.points:
+        sites = capture_sites(entry, point)
+        if len(sites) != entry.sites:
+            out.append(Finding(
+                "site-count", path, line,
+                f"{entry.name}: {len(sites)} pallas_call site(s) "
+                f"captured at {point}, registry declares {entry.sites}"))
+            continue
+        implied = 0
+        for si, site in enumerate(sites):
+            out.extend(_check_site_blocks(entry, site, path, line))
+            out.extend(_check_site_coverage(
+                entry, site, entry.out_revisit[si], path, line))
+            implied = max(implied,
+                          _implied_vmem_bytes(entry, site, point))
+        if estimator is not None and entry.estimator_kwargs is not None:
+            est = int(estimator(**entry.estimator_kwargs(point)))
+            if abs(est - implied) > entry.slack * max(est, implied, 1):
+                out.append(Finding(
+                    "estimator-drift", path, line,
+                    f"{entry.name}: estimator says {est} bytes at "
+                    f"{point} but the captured BlockSpecs imply "
+                    f"{implied} bytes (slack {entry.slack:.0%})"))
+    return out
+
+
+def check_entries(entries=None) -> List[Finding]:
+    entries = head_entries() if entries is None else entries
+    out: List[Finding] = []
+    for entry in entries:
+        out.extend(check_entry(entry))
+    return out

@@ -1,0 +1,202 @@
+"""Kernel-contract registry (DESIGN.md §12).
+
+Every Pallas kernel wrapper in `repro.kernels` registers a contract
+entry via the `@kernel_contract(...)` decorator (applied ABOVE the
+`jax.jit` partial, so the entry holds the public wrapper). The entry
+is pure metadata — the decorator returns the function unchanged — and
+records everything `repro.analysis.kernel_contracts` needs to verify
+the kernel mechanically:
+
+  * `sites`            how many `pl.pallas_call` sites the wrapper
+                       launches (the completeness guard in
+                       tests/test_analysis.py greps the kernel files
+                       and asserts the per-module totals match);
+  * `oracle`           the jnp twin's name in `kernels/ref.py`;
+  * `estimator`        the VMEM estimator's name in
+                       `core.backends.VMEM_ESTIMATORS` (None for
+                       kernels whose budget is docstring-only), plus
+                       `estimator_kwargs(point)` mapping a
+                       representative shape point to its arguments;
+  * `exactness`        "bit_exact" | "tolerance" — the testing class
+                       the kernel's docstring claims;
+  * `out_revisit`      per-site grid axes that may legally revisit an
+                       output block (accumulation axes: the lsh chunk
+                       axis, the §10 column-tile axis, flash's KV
+                       axis). Any OTHER revisit is an output race;
+  * `points`           representative shape points (≥ 3 for
+                       estimator-backed kernels), with
+                       `make_args(point)` building abstract
+                       (ShapeDtypeStruct) arguments;
+  * `vmem_extra`       bytes of kernel-internal intermediates beyond
+                       the blocks themselves (unpacked ±1 codes,
+                       weight tiles), computed FROM the captured
+                       block shapes so estimator drift is caught in
+                       either direction;
+  * `slack`            relative tolerance for estimator truthfulness.
+
+Capture ("abstract interpretation" layer 0): `capture_sites` runs the
+un-jitted wrapper under `jax.eval_shape` with `pl.pallas_call`
+monkey-patched to record (grid, in_specs, out_specs, out_shape,
+scratch_shapes, operands) and return zeros of the declared out_shape.
+No kernel body executes, no array memory is allocated, and the real
+jit cache is never touched (the un-jitted function is traced inside
+eval_shape's own scope).
+
+This module is import-light on purpose (stdlib only at module level):
+kernel modules import it at import time, so it must not pull in jax or
+any `repro` sibling.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+EXACTNESS_CLASSES = ("bit_exact", "tolerance")
+
+# name -> KernelEntry; populated at kernel-module import time
+REGISTRY: Dict[str, "KernelEntry"] = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelEntry:
+    name: str
+    fn: Callable
+    module: str
+    sites: int
+    oracle: Optional[str]
+    estimator: Any            # str (backends name) | callable | None
+    exactness: str
+    out_revisit: Tuple[Tuple[int, ...], ...]   # per site
+    points: Tuple[dict, ...]
+    make_args: Callable       # point -> (args, kwargs)
+    estimator_kwargs: Optional[Callable]       # point -> dict
+    vmem_extra: Optional[Callable]             # (site, point) -> int
+    slack: float
+
+
+def _normalize_revisit(out_revisit, sites: int) -> Tuple[Tuple[int, ...], ...]:
+    """Single-site entries may declare a flat tuple of axes; multi-site
+    entries must declare one tuple per site."""
+    rv = tuple(out_revisit)
+    if sites == 1 and all(isinstance(a, int) for a in rv):
+        return (rv,)
+    if len(rv) != sites or not all(
+            isinstance(s, (tuple, list)) for s in rv):
+        raise ValueError(
+            f"out_revisit must be one tuple of axes per site "
+            f"({sites} sites), got {out_revisit!r}")
+    return tuple(tuple(s) for s in rv)
+
+
+def kernel_contract(*, name: str, sites: int, oracle: Optional[str],
+                    estimator, exactness: str, out_revisit=(),
+                    points: Sequence[dict] = (),
+                    make_args: Optional[Callable] = None,
+                    estimator_kwargs: Optional[Callable] = None,
+                    vmem_extra: Optional[Callable] = None,
+                    slack: float = 0.10):
+    """Register a kernel wrapper's contract; returns the fn unchanged."""
+    if exactness not in EXACTNESS_CLASSES:
+        raise ValueError(f"unknown exactness: {exactness!r} "
+                         f"(expected one of {EXACTNESS_CLASSES})")
+    if make_args is None:
+        raise ValueError(f"kernel_contract({name!r}) needs make_args=")
+    revisit = _normalize_revisit(out_revisit, sites)
+
+    def deco(fn):
+        REGISTRY[name] = KernelEntry(
+            name=name, fn=fn, module=fn.__module__, sites=sites,
+            oracle=oracle, estimator=estimator, exactness=exactness,
+            out_revisit=revisit, points=tuple(points),
+            make_args=make_args, estimator_kwargs=estimator_kwargs,
+            vmem_extra=vmem_extra, slack=slack)
+        return fn
+
+    return deco
+
+
+class capture_registrations:
+    """Context manager: record entries registered while it is active
+    (used to check fixture modules in isolation from the HEAD
+    registry)."""
+
+    def __enter__(self) -> List[KernelEntry]:
+        self._before = set(REGISTRY)
+        self._new: List[KernelEntry] = []
+        return self._new
+
+    def __exit__(self, *exc):
+        for k in set(REGISTRY) - self._before:
+            self._new.append(REGISTRY.pop(k))
+        return False
+
+
+# ---------------------------------------------------------------------------
+# pallas_call capture
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class CapturedSite:
+    """One recorded `pl.pallas_call` launch (all specs normalized to
+    lists; operands recorded as ShapeDtypeStructs at call time)."""
+    kernel_fn: Any
+    grid: Tuple[int, ...]
+    in_specs: list
+    out_specs: list
+    out_shapes: list
+    scratch_shapes: list
+    operands: list = dataclasses.field(default_factory=list)
+    interpret: bool = False
+
+
+def _aslist(x):
+    if x is None:
+        return []
+    return list(x) if isinstance(x, (list, tuple)) else [x]
+
+
+def unjitted(fn):
+    """The pre-jit function (jax.jit wrappers carry __wrapped__)."""
+    return getattr(fn, "__wrapped__", fn)
+
+
+def capture_sites(entry: KernelEntry, point: dict) -> List[CapturedSite]:
+    """Run `entry.fn` (un-jitted, under jax.eval_shape) at `point` with
+    pallas_call monkey-patched; returns the recorded launch sites in
+    call order."""
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    captured: List[CapturedSite] = []
+    real = pl.pallas_call
+
+    def fake_pallas_call(kernel, *fa, grid=None, in_specs=None,
+                         out_specs=None, out_shape=None,
+                         scratch_shapes=(), interpret=False, **fk):
+        site = CapturedSite(
+            kernel_fn=kernel,
+            grid=(grid,) if isinstance(grid, int) else tuple(grid or ()),
+            in_specs=_aslist(in_specs), out_specs=_aslist(out_specs),
+            out_shapes=_aslist(out_shape),
+            scratch_shapes=_aslist(scratch_shapes),
+            interpret=bool(interpret))
+
+        def runner(*ops):
+            site.operands = [
+                jax.ShapeDtypeStruct(jnp.shape(o), jnp.result_type(o))
+                for o in ops]
+            captured.append(site)
+            return jax.tree_util.tree_map(
+                lambda s: jnp.zeros(s.shape, s.dtype), out_shape)
+
+        return runner
+
+    pl.pallas_call = fake_pallas_call
+    try:
+        args, kwargs = entry.make_args(point)
+        jax.eval_shape(
+            functools.partial(unjitted(entry.fn), **kwargs), *args)
+    finally:
+        pl.pallas_call = real
+    return captured

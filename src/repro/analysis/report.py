@@ -1,0 +1,78 @@
+"""Finding record + report formatting for `repro.analysis` (stdlib only)."""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, List, Optional
+
+# rule id -> one-line description (kept in sync with DESIGN.md §12)
+RULES = {
+    "tile-gap": "output-tile coverage gap: some output block is never "
+                "written by any grid point",
+    "tile-race": "output-tile write race: two grid points outside the "
+                 "declared revisit axes write the same output block",
+    "tile-oob": "index map addresses a block outside the output array",
+    "block-mismatch": "block shape / arity inconsistency between "
+                      "BlockSpecs, operands, and the kernel body",
+    "site-count": "number of pallas_call sites differs from the "
+                  "registry declaration",
+    "oracle-missing": "declared jnp oracle twin not found in kernels/ref.py",
+    "estimator-missing": "declared VMEM estimator not registered in "
+                         "core.backends.VMEM_ESTIMATORS",
+    "estimator-drift": "registered VMEM estimator disagrees with the "
+                       "BlockSpec-implied bytes beyond the declared slack",
+    "traced-host-cast": "host cast (int/float/.item()/np.*) on a value "
+                        "reachable from traced args inside a traced context",
+    "host-if": "Python `if` on a traced value inside a traced context",
+    "unseeded-key": "constant PRNG key inside a traced context "
+                    "(round-independent randomness)",
+    "host-sync": "host-side numpy/scalar extraction of device values "
+                 "(needs an `# analysis: host-ok` justification)",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str
+    line: int
+    message: str
+    severity: str = "error"  # "error" | "warning"
+
+    def location(self) -> str:
+        return f"{self.path}:{self.line}"
+
+    def __str__(self) -> str:
+        return f"{self.location()}: [{self.rule}] {self.message}"
+
+
+def render_text(findings: List[Finding]) -> str:
+    if not findings:
+        return "repro.analysis: clean (0 findings)"
+    lines = [str(f) for f in findings]
+    by_rule: Dict[str, int] = {}
+    for f in findings:
+        by_rule[f.rule] = by_rule.get(f.rule, 0) + 1
+    summary = ", ".join(f"{r}={n}" for r, n in sorted(by_rule.items()))
+    lines.append(f"repro.analysis: {len(findings)} finding(s) ({summary})")
+    return "\n".join(lines)
+
+
+def render_json(findings: List[Finding], *, strict: bool,
+                checked_entries: Optional[List[str]] = None,
+                linted_paths: Optional[List[str]] = None) -> str:
+    """`--json` payload: rule -> count -> locations, diffable across
+    PRs (benchmarks/ANALYSIS_report.json)."""
+    rules: Dict[str, Dict] = {}
+    for f in sorted(findings, key=lambda f: (f.rule, f.path, f.line)):
+        r = rules.setdefault(f.rule, {"count": 0, "locations": []})
+        r["count"] += 1
+        r["locations"].append(f"{f.location()} {f.message}")
+    return json.dumps({
+        "clean": not findings,
+        "strict": strict,
+        "total": len(findings),
+        "rules": rules,
+        "kernel_entries": checked_entries or [],
+        "linted_paths": linted_paths or [],
+    }, indent=1)

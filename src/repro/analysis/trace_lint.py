@@ -1,0 +1,449 @@
+"""Layer 2: AST trace-safety lint over `core/`, `kernels/`, `launch/`.
+
+Flags the statically-detectable trace bugs this repo has actually hit
+(DESIGN.md §12):
+
+  * `traced-host-cast` — `int()` / `float()` / `.item()` / `np.*` on a
+    value reachable from traced arguments inside a TRACED CONTEXT: a
+    `jax.jit`-decorated function, a Pallas kernel body (first argument
+    of a `pl.pallas_call`), or a function/lambda passed to `lax.scan`
+    / `lax.cond` / `lax.while_loop` / `lax.fori_loop` / `lax.switch`.
+    Keyword-only kernel-body params (bound via functools.partial) and
+    `static_argnames` of jitted functions are static, not traced.
+  * `host-if` — a Python `if` whose test references a traced value
+    inside a traced context (PR 4's poison_step bug class: silently
+    freezes the branch at trace time or crashes under scan).
+  * `unseeded-key` — `jax.random.PRNGKey(<constant>)` (or
+    `jax.random.key`) inside a traced context: the key is identical
+    every round, so "random" behavior is round-independent (PR 1's
+    dead-seed bug class).
+  * `host-sync` — outside traced contexts, host extraction of values
+    derived from function parameters: `.item()`, `np.*(derived)`, and
+    `int()/float()` on non-trivial derived expressions (subscripts /
+    calls — bare config-scalar names are not flagged, nor are
+    `.shape`/`.ndim`/`.size`/`len()` accesses, which are host-static).
+    Genuine host paths (telemetry, post-`block_until_ready` metric
+    extraction, the host-side chain ledger) carry an explicit
+    `# analysis: host-ok <why>` exemption on the finding line, the
+    line above, or trailing the enclosing `def` line (function-wide).
+
+The lint is intra-procedural by design: taint starts at the context's
+traced params and propagates through assignments/loops syntactically.
+Helpers called WITH traced values are not followed — the registry's
+kernel-contract layer covers kernels, and keeping the lint local keeps
+its findings explainable (every finding names the tainted name chain's
+function).
+"""
+from __future__ import annotations
+
+import ast
+import io
+import os
+import tokenize
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.report import Finding
+
+HOST_OK_MARK = "analysis: host-ok"
+
+# attributes whose access yields host-static metadata, not device data
+_STATIC_ATTRS = {"shape", "ndim", "size", "dtype"}
+_STATIC_CALLS = {"len", "range", "isinstance", "getattr", "type"}
+_LAX_CONSUMERS = {"scan", "cond", "while_loop", "fori_loop", "switch",
+                  "map", "associative_scan"}
+
+
+def _dotted(node) -> Optional[str]:
+    """`jax.lax.scan` -> "jax.lax.scan"; None for non-name chains."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+class _ModuleIndex:
+    """Per-file context: defs by name, import aliases, comments."""
+
+    def __init__(self, tree: ast.Module, src: str):
+        self.defs: Dict[str, ast.FunctionDef] = {}
+        self.np_aliases: Set[str] = set()
+        self.exempt_lines: Set[int] = set()
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self.defs[node.name] = node
+            elif isinstance(node, ast.Import):
+                for a in node.names:
+                    if a.name in ("numpy", "numpy.typing"):
+                        self.np_aliases.add(a.asname or "numpy")
+            elif isinstance(node, ast.ImportFrom):
+                if node.module == "numpy":
+                    continue  # from numpy import X — rare, skip
+        try:
+            for tok in tokenize.generate_tokens(io.StringIO(src).readline):
+                if tok.type == tokenize.COMMENT and \
+                        HOST_OK_MARK in tok.string:
+                    self.exempt_lines.add(tok.start[0])
+        except tokenize.TokenError:
+            pass
+
+
+# ---------------------------------------------------------------------------
+# traced-context discovery
+# ---------------------------------------------------------------------------
+def _jit_decorator_statics(dec) -> Optional[Tuple[bool, Set[str]]]:
+    """(is_jit, static_argnames) if `dec` is a jit decorator."""
+    d = _dotted(dec)
+    if d in ("jax.jit", "jit"):
+        return True, set()
+    if isinstance(dec, ast.Call):
+        f = _dotted(dec.func)
+        statics: Set[str] = set()
+
+        def collect(kwlist):
+            for kw in kwlist:
+                if kw.arg == "static_argnames":
+                    v = kw.value
+                    if isinstance(v, ast.Constant) and \
+                            isinstance(v.value, str):
+                        statics.add(v.value)
+                    elif isinstance(v, (ast.Tuple, ast.List)):
+                        for e in v.elts:
+                            if isinstance(e, ast.Constant):
+                                statics.add(str(e.value))
+
+        if f in ("jax.jit", "jit"):
+            collect(dec.keywords)
+            return True, statics
+        if f in ("functools.partial", "partial") and dec.args and \
+                _dotted(dec.args[0]) in ("jax.jit", "jit"):
+            collect(dec.keywords)
+            return True, statics
+    return None
+
+
+def _first_arg_def_name(call: ast.Call) -> Optional[str]:
+    """Kernel body name from `pallas_call(f, ...)` or
+    `pallas_call(functools.partial(f, ...), ...)`."""
+    if not call.args:
+        return None
+    a = call.args[0]
+    if isinstance(a, ast.Name):
+        return a.id
+    if isinstance(a, ast.Call) and \
+            _dotted(a.func) in ("functools.partial", "partial") and \
+            a.args and isinstance(a.args[0], ast.Name):
+        return a.args[0].id
+    return None
+
+
+def _find_traced_contexts(tree: ast.Module, idx: _ModuleIndex):
+    """-> list of (node, kind, traced_params). node is FunctionDef or
+    Lambda; kind in {"jit", "kernel", "lax"}."""
+    contexts = []
+    seen = set()
+
+    def add(node, kind, traced):
+        if node is not None and id(node) not in seen:
+            seen.add(id(node))
+            contexts.append((node, kind, traced))
+
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                jit = _jit_decorator_statics(dec)
+                if jit is not None:
+                    _is, statics = jit
+                    params = _param_names(node.args)
+                    add(node, "jit",
+                        {p for p in params if p not in statics})
+                    break
+        elif isinstance(node, ast.Call):
+            f = _dotted(node.func) or ""
+            if f.endswith("pallas_call") or f == "pallas_call":
+                name = _first_arg_def_name(node)
+                body = idx.defs.get(name) if name else None
+                if body is not None:
+                    # positional refs are traced; kw-only params are
+                    # functools.partial-bound statics
+                    pos = [a.arg for a in body.args.posonlyargs
+                           + body.args.args]
+                    add(body, "kernel", set(pos))
+            else:
+                tail = f.rsplit(".", 1)[-1]
+                base = f.rsplit(".", 1)[0] if "." in f else ""
+                if tail in _LAX_CONSUMERS and (
+                        base.endswith("lax") or base in ("jax", "")):
+                    if base == "" and tail in ("map",):
+                        continue  # bare map() is the builtin
+                    for a in node.args:
+                        if isinstance(a, ast.Name) and a.id in idx.defs:
+                            body = idx.defs[a.id]
+                            add(body, "lax",
+                                set(_param_names(body.args)))
+                        elif isinstance(a, ast.Lambda):
+                            add(a, "lax", set(_param_names(a.args)))
+    return contexts
+
+
+def _param_names(args: ast.arguments) -> List[str]:
+    names = [a.arg for a in args.posonlyargs + args.args + args.kwonlyargs]
+    if args.vararg:
+        names.append(args.vararg.arg)
+    if args.kwarg:
+        names.append(args.kwarg.arg)
+    return names
+
+
+# ---------------------------------------------------------------------------
+# taint
+# ---------------------------------------------------------------------------
+def _refs_tainted(node, tainted: Set[str]) -> bool:
+    """Does `node` reference a tainted name, ignoring host-static
+    accessor subtrees (`x.shape`, `len(x)`, ...)?"""
+    if isinstance(node, ast.Attribute) and node.attr in _STATIC_ATTRS:
+        return False
+    if isinstance(node, ast.Call):
+        f = _dotted(node.func)
+        if f in _STATIC_CALLS:
+            return False
+    if isinstance(node, ast.Name):
+        return node.id in tainted
+    for child in ast.iter_child_nodes(node):
+        if _refs_tainted(child, tainted):
+            return True
+    return False
+
+
+def _target_names(t) -> List[str]:
+    if isinstance(t, ast.Name):
+        return [t.id]
+    if isinstance(t, ast.Starred):
+        return _target_names(t.value)
+    if isinstance(t, (ast.Tuple, ast.List)):
+        out = []
+        for e in t.elts:
+            out.extend(_target_names(e))
+        return out
+    if isinstance(t, (ast.Subscript, ast.Attribute)):
+        return _target_names(t.value)
+    return []
+
+
+def _propagate_taint(fn_node, tainted: Set[str]) -> Set[str]:
+    """Fixed-point syntactic taint through assignments/loops."""
+    tainted = set(tainted)
+    for _ in range(8):
+        changed = False
+
+        def mark(names):
+            nonlocal changed
+            for n in names:
+                if n not in tainted:
+                    tainted.add(n)
+                    changed = True
+
+        for node in ast.walk(fn_node):
+            if isinstance(node, ast.Assign):
+                if _refs_tainted(node.value, tainted):
+                    for t in node.targets:
+                        mark(_target_names(t))
+            elif isinstance(node, ast.AugAssign):
+                if _refs_tainted(node.value, tainted):
+                    mark(_target_names(node.target))
+            elif isinstance(node, ast.AnnAssign) and node.value:
+                if _refs_tainted(node.value, tainted):
+                    mark(_target_names(node.target))
+            elif isinstance(node, ast.NamedExpr):
+                if _refs_tainted(node.value, tainted):
+                    mark(_target_names(node.target))
+            elif isinstance(node, ast.For):
+                if _refs_tainted(node.iter, tainted):
+                    mark(_target_names(node.target))
+            elif isinstance(node, ast.comprehension):
+                if _refs_tainted(node.iter, tainted):
+                    mark(_target_names(node.target))
+            elif isinstance(node, ast.withitem) and node.optional_vars:
+                if _refs_tainted(node.context_expr, tainted):
+                    mark(_target_names(node.optional_vars))
+        if not changed:
+            break
+    return tainted
+
+
+# ---------------------------------------------------------------------------
+# rules
+# ---------------------------------------------------------------------------
+def _body_nodes(fn_node):
+    if isinstance(fn_node, ast.Lambda):
+        yield from ast.walk(fn_node.body)
+        return
+    for stmt in fn_node.body:
+        yield from ast.walk(stmt)
+
+
+def _is_np_call(node: ast.Call, np_aliases: Set[str]) -> bool:
+    f = _dotted(node.func)
+    return bool(f) and "." in f and f.split(".", 1)[0] in np_aliases
+
+
+def _is_prng_const(node: ast.Call) -> bool:
+    f = _dotted(node.func) or ""
+    if not (f.endswith(".random.PRNGKey") or f.endswith(".random.key")
+            or f == "PRNGKey"):
+        return False
+    return bool(node.args) and all(
+        isinstance(a, ast.Constant) for a in node.args)
+
+
+def _check_traced_context(fn_node, kind: str, traced: Set[str],
+                          idx: _ModuleIndex, path: str) -> List[Finding]:
+    out: List[Finding] = []
+    tainted = _propagate_taint(fn_node, traced)
+    ctx = getattr(fn_node, "name", "<lambda>")
+    for node in _body_nodes(fn_node):
+        if isinstance(node, ast.Call):
+            f = _dotted(node.func)
+            if f in ("int", "float") and any(
+                    _refs_tainted(a, tainted) for a in node.args):
+                out.append(Finding(
+                    "traced-host-cast", path, node.lineno,
+                    f"{f}() on a traced value inside {kind} context "
+                    f"{ctx!r}"))
+            elif isinstance(node.func, ast.Attribute) and \
+                    node.func.attr == "item" and not node.args and \
+                    _refs_tainted(node.func.value, tainted):
+                out.append(Finding(
+                    "traced-host-cast", path, node.lineno,
+                    f".item() on a traced value inside {kind} context "
+                    f"{ctx!r}"))
+            elif _is_np_call(node, idx.np_aliases) and any(
+                    _refs_tainted(a, tainted) for a in node.args):
+                out.append(Finding(
+                    "traced-host-cast", path, node.lineno,
+                    f"numpy call {_dotted(node.func)}() on a traced "
+                    f"value inside {kind} context {ctx!r}"))
+            elif _is_prng_const(node):
+                out.append(Finding(
+                    "unseeded-key", path, node.lineno,
+                    f"constant PRNG key inside {kind} context {ctx!r} "
+                    f"— the key never varies with the round"))
+        elif isinstance(node, ast.If) and \
+                _refs_tainted(node.test, tainted):
+            out.append(Finding(
+                "host-if", path, node.lineno,
+                f"Python `if` on a traced value inside {kind} context "
+                f"{ctx!r} (use lax.cond / jnp.where)"))
+    return out
+
+
+def _check_host_function(fn_node, idx: _ModuleIndex,
+                         path: str) -> List[Finding]:
+    out: List[Finding] = []
+    tainted = _propagate_taint(
+        fn_node, set(_param_names(fn_node.args)))
+    ctx = fn_node.name
+    for node in _body_nodes(fn_node):
+        if not isinstance(node, ast.Call):
+            continue
+        f = _dotted(node.func)
+        if f in ("int", "float"):
+            for a in node.args[:1]:
+                if not isinstance(a, (ast.Subscript, ast.Call,
+                                      ast.Attribute)):
+                    # bare names / arithmetic on them is config math;
+                    # syncs look like extractions: x[i], d.get(k), x.v
+                    continue
+                if _refs_tainted(a, tainted):
+                    out.append(Finding(
+                        "host-sync", path, node.lineno,
+                        f"{f}() forces a device sync on a derived "
+                        f"value in {ctx!r}"))
+        elif isinstance(node.func, ast.Attribute) and \
+                node.func.attr == "item" and not node.args and \
+                _refs_tainted(node.func.value, tainted):
+            out.append(Finding(
+                "host-sync", path, node.lineno,
+                f".item() forces a device sync in {ctx!r}"))
+        elif _is_np_call(node, idx.np_aliases) and any(
+                _refs_tainted(a, tainted) for a in node.args):
+            out.append(Finding(
+                "host-sync", path, node.lineno,
+                f"{f}() pulls a derived value to host in {ctx!r}"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+def lint_source(src: str, path: str) -> List[Finding]:
+    try:
+        tree = ast.parse(src, filename=path)
+    except SyntaxError as e:
+        return [Finding("host-sync", path, e.lineno or 1,
+                        f"syntax error: {e.msg}")]
+    idx = _ModuleIndex(tree, src)
+    contexts = _find_traced_contexts(tree, idx)
+    traced_ids = {id(n) for n, _, _ in contexts}
+
+    findings: List[Finding] = []
+    fn_spans: List[Tuple[int, int]] = []
+    for node, kind, traced in contexts:
+        findings.extend(_check_traced_context(node, kind, traced,
+                                              idx, path))
+
+    def inside_traced(node) -> bool:
+        return id(node) in traced_ids
+
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                and not inside_traced(node):
+            # nested defs inside traced contexts are covered above;
+            # nested host helpers get their own pass (params tainted)
+            findings.extend(_check_host_function(node, idx, path))
+            fn_spans.append((node.lineno,
+                             getattr(node, "end_lineno", node.lineno)))
+
+    # host-ok exemptions: marker on the line, the line above, or the
+    # def line of the enclosing function
+    def_lines = set()
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                and node.lineno in idx.exempt_lines:
+            def_lines.add((node.lineno,
+                           getattr(node, "end_lineno", node.lineno)))
+
+    def exempt(f: Finding) -> bool:
+        if f.line in idx.exempt_lines or (f.line - 1) in idx.exempt_lines:
+            return True
+        return any(lo <= f.line <= hi for lo, hi in def_lines)
+
+    # de-dup (a call can match in both a traced context and its
+    # enclosing host pass walk) and drop exempted findings
+    uniq = {}
+    for f in findings:
+        if not exempt(f):
+            uniq.setdefault((f.rule, f.path, f.line, f.message), f)
+    return sorted(uniq.values(), key=lambda f: (f.path, f.line, f.rule))
+
+
+def lint_file(path: str) -> List[Finding]:
+    with open(path, "r", encoding="utf-8") as fh:
+        return lint_source(fh.read(), path)
+
+
+def lint_paths(paths) -> List[Finding]:
+    out: List[Finding] = []
+    for p in paths:
+        if os.path.isdir(p):
+            for root, dirs, files in os.walk(p):
+                dirs[:] = [d for d in dirs if d != "__pycache__"]
+                for f in sorted(files):
+                    if f.endswith(".py"):
+                        out.extend(lint_file(os.path.join(root, f)))
+        elif p.endswith(".py"):
+            out.extend(lint_file(p))
+    return out

@@ -59,13 +59,21 @@ def interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def _reject(field: str, value, accepted) -> ValueError:
+    """The one rejection formatter for every backend/tiling string
+    (DESIGN.md §12): the message always names the offending FIELD, the
+    offending value, and the accepted set, in this exact shape — the
+    property test in tests/test_analysis.py asserts on it."""
+    return ValueError(
+        f"unknown {field}: {value!r} (expected one of {tuple(accepted)})")
+
+
 def resolve(backend: str) -> str:
     """Validate and resolve a backend string to "kernel" or "oracle"."""
     if backend == "auto":
         return "kernel" if jax.default_backend() == "tpu" else "oracle"
     if backend not in ("kernel", "oracle"):
-        raise ValueError(
-            f"unknown backend: {backend!r} (expected one of {BACKENDS})")
+        raise _reject("backend", backend, BACKENDS)
     return backend
 
 
@@ -123,6 +131,21 @@ def ann_vmem_bytes(bits_tot: int, *, block_m: int = 8,
     return unpacked + weights + scratch
 
 
+# Introspection hook for the static-analysis gate (DESIGN.md §12):
+# every estimator that a kernel contract can declare by name. The
+# `repro.analysis` kernel-contract checker cross-validates each one
+# against the VMEM bytes implied by the kernel's actual BlockSpecs, so
+# a kernel retune that forgets this file fails CI instead of silently
+# skewing resolve_tiling's "auto" decision.
+VMEM_ESTIMATORS = {
+    "selection_vmem_bytes": selection_vmem_bytes,
+    "selection_tiled_vmem_bytes": selection_tiled_vmem_bytes,
+    "exchange_vmem_bytes": exchange_vmem_bytes,
+    "exchange_tiled_vmem_bytes": exchange_tiled_vmem_bytes,
+    "ann_vmem_bytes": ann_vmem_bytes,
+}
+
+
 # ---------------------------------------------------------------------------
 # per-round FLOP estimates — the "auto" exact-vs-ann decision (§11)
 # ---------------------------------------------------------------------------
@@ -156,9 +179,7 @@ def resolve_selection(backend: str, m: int, *, exact_flops: float,
             return "ann"
         return resolve("auto")
     if backend not in ("kernel", "oracle"):
-        raise ValueError(
-            f"unknown selection backend: {backend!r} "
-            f"(expected one of {SELECTION_BACKENDS})")
+        raise _reject("selection backend", backend, SELECTION_BACKENDS)
     return backend
 
 
@@ -173,6 +194,5 @@ def resolve_tiling(tiling: str, est_oneshot_bytes: int, *,
         budget = VMEM_BUDGET_BYTES if budget_bytes is None else budget_bytes
         return "oneshot" if est_oneshot_bytes <= budget else "tiled"
     if tiling not in ("oneshot", "tiled"):
-        raise ValueError(
-            f"unknown tiling: {tiling!r} (expected one of {TILINGS})")
+        raise _reject("tiling", tiling, TILINGS)
     return tiling

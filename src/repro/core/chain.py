@@ -33,6 +33,7 @@ import numpy as np
 # ---------------------------------------------------------------------------
 def canonical_ranking_bytes(ranking) -> bytes:
     """Rankings are int vectors (neighbor ids, best first; -1 padding)."""
+    # analysis: host-ok — the ledger hashes host bytes by design (§8)
     arr = np.asarray(ranking, np.int64)
     return arr.tobytes() + arr.shape.__repr__().encode()
 
@@ -140,4 +141,5 @@ def verify_reveal(commitment_hex: str, revealed_ranking, salt: int = 0) -> bool:
 
 
 def lsh_code_hex(code) -> str:
+    # analysis: host-ok — announcement serialization for the host ledger
     return np.asarray(code, np.uint32).tobytes().hex()

@@ -194,8 +194,10 @@ def run_rounds(program: RoundProgram, state, data, *, rounds: int,
             entry: Dict[str, Any] = {}
             for k, v in metrics.items():
                 if getattr(v, "ndim", None) == 1:  # per-round scalar
-                    entry[k] = (int(v[i]) if jnp.issubdtype(v.dtype, jnp.integer)
-                                else float(v[i]))
+                    is_int = jnp.issubdtype(v.dtype, jnp.integer)
+                    # history extraction runs once per reselection
+                    # period, after block_until_ready: analysis: host-ok
+                    entry[k] = int(v[i]) if is_int else float(v[i])
             entry["round"] = r0 + i
             history.append(entry)
         if log is not None:

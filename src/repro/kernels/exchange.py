@@ -65,6 +65,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.analysis.registry import kernel_contract
+
 BM_EXC = 4          # client block per program
 BR_EXC = 8          # reference-row tile of the streamed kernel
 BC_EXC = 512        # class-column tile of the streamed kernel
@@ -124,6 +126,28 @@ def _exchange_kernel(own_ref, nb_ref, y_ref, sel_ref,
                        / denom[:, None, None])
 
 
+# --- repro.analysis contract helpers (DESIGN.md §12) -----------------------
+def _exchange_point_args(pt):
+    """Abstract (ShapeDtypeStruct) args for an {m, n, r, c} point."""
+    m, n, r, c = pt["m"], pt["n"], pt["r"], pt["c"]
+    args = (jax.ShapeDtypeStruct((m, r, c), jnp.float32),
+            jax.ShapeDtypeStruct((m, n, r, c), jnp.float32),
+            jax.ShapeDtypeStruct((m, r), jnp.int32),
+            jax.ShapeDtypeStruct((m, n), jnp.bool_))
+    return args, dict(lsh_verification=True)
+
+
+@kernel_contract(
+    name="exchange_oneshot", sites=1, oracle="all_in_one_exchange_ref",
+    estimator="exchange_vmem_bytes", exactness="bit_exact",
+    out_revisit=(),
+    points=({"m": 8, "n": 8, "r": 32, "c": 512},
+            {"m": 8, "n": 16, "r": 64, "c": 1024},
+            {"m": 4, "n": 4, "r": 16, "c": 256}),
+    make_args=_exchange_point_args,
+    estimator_kwargs=lambda pt: {"n": pt["n"], "r": pt["r"],
+                                 "c": pt["c"]},
+    slack=0.05)
 @functools.partial(jax.jit, static_argnames=("lsh_verification",
                                              "interpret"))
 def fused_exchange(own_logits, neighbor_logits, y_ref, sel_mask, *,
@@ -267,6 +291,19 @@ def streamed_tiles(r: int, c: int, block_r: int, block_c: int):
     return br, (-r) % br, bc, (-c) % bc
 
 
+@kernel_contract(
+    name="exchange_streamed", sites=2, oracle="streamed_exchange_ref",
+    estimator="exchange_tiled_vmem_bytes", exactness="tolerance",
+    # stats site: outputs land once at (i, 0) while the (ri, ci) tile
+    # axes accumulate into scratch; target site writes (i, ri, ci)
+    # exactly once.
+    out_revisit=((1, 2), ()),
+    points=({"m": 8, "n": 8, "r": 32, "c": 2048},
+            {"m": 4, "n": 16, "r": 64, "c": 1024},
+            {"m": 4, "n": 8, "r": 16, "c": 4096}),
+    make_args=_exchange_point_args,
+    estimator_kwargs=lambda pt: {"n": pt["n"]},
+    slack=0.05)
 @functools.partial(jax.jit, static_argnames=(
     "lsh_verification", "interpret", "block_m", "block_r", "block_c"))
 def fused_exchange_streamed(own_logits, neighbor_logits, y_ref, sel_mask,

@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.analysis.registry import kernel_contract
+
 BQ = 256
 BK = 256
 NEG_INF = -1e30
@@ -69,6 +71,20 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
                     ).astype(o_ref.dtype)
 
 
+def _flash_point_args(pt):
+    n, sq, sk, dh = pt["n"], pt["sq"], pt["sk"], pt["dh"]
+    q = jax.ShapeDtypeStruct((n, sq, dh), jnp.float32)
+    kv = jax.ShapeDtypeStruct((n, sk, dh), jnp.float32)
+    return (q, kv, kv), dict(causal=True)
+
+
+@kernel_contract(
+    name="flash_attention", sites=1, oracle="flash_attention_ref",
+    estimator=None, exactness="tolerance",
+    out_revisit=(2,),           # KV axis accumulates into scratch
+    points=({"n": 2, "sq": 512, "sk": 512, "dh": 128},
+            {"n": 1, "sq": 1024, "sk": 512, "dh": 64}),
+    make_args=_flash_point_args)
 @functools.partial(jax.jit,
                    static_argnames=("causal", "scale", "interpret"))
 def flash_attention(q, k, v, *, causal: bool = True, scale: float = 0.0,

@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.analysis.registry import kernel_contract
+
 BM = 32
 BN = 128
 
@@ -37,6 +39,15 @@ def _hamming_kernel(a_ref, b_ref, out_ref):
     out_ref[...] = jnp.sum(popcount_u32(x), axis=-1)
 
 
+@kernel_contract(
+    name="hamming", sites=1, oracle="hamming_all_pairs_ref",
+    estimator=None, exactness="bit_exact",
+    out_revisit=(),             # each (BM, BN) tile is written once
+    points=({"m": 64, "n": 256, "w": 8}, {"m": 32, "n": 128, "w": 8},
+            {"m": 96, "n": 384, "w": 16}),
+    make_args=lambda pt: (
+        (jax.ShapeDtypeStruct((pt["m"], pt["w"]), jnp.uint32),
+         jax.ShapeDtypeStruct((pt["n"], pt["w"]), jnp.uint32)), {}))
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def hamming_all_pairs(codes_a, codes_b, *, interpret: bool = True):
     """codes: (M, W) x (N, W) uint32 (M % BM == 0, N % BN == 0, caller

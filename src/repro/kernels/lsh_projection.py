@@ -41,6 +41,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.analysis.registry import kernel_contract
+
 CHUNK = 2048
 BLOCK_M = 8        # client rows per batched program (f32 sublane width)
 _K1 = 2654435761   # Knuth multiplicative hash (plain ints: pallas kernels
@@ -78,6 +80,14 @@ def _lsh_kernel(seed_ref, x_ref, out_ref, *, bits: int):
     out_ref[...] += jnp.dot(x, r, preferred_element_type=jnp.float32)
 
 
+@kernel_contract(
+    name="lsh_single", sites=1, oracle="lsh_project_sums_ref",
+    estimator=None, exactness="tolerance",
+    out_revisit=(0,),           # the (1, bits) block accumulates chunks
+    points=({"p": 4096, "bits": 256}, {"p": 8192, "bits": 256}),
+    make_args=lambda pt: (
+        (jax.ShapeDtypeStruct((pt["p"],), jnp.float32),),
+        dict(seed=7, bits=pt["bits"])))
 @functools.partial(jax.jit, static_argnames=("bits", "interpret"))
 def lsh_project_sums(x, seed, *, bits: int = 256, interpret: bool = True):
     """x: (P,) f32 (P padded to CHUNK by the caller) -> (bits,) f32 sums."""
@@ -111,6 +121,15 @@ def _lsh_batched_kernel(seed_ref, x_ref, out_ref, *, bits: int):
     out_ref[...] += jnp.dot(x, r, preferred_element_type=jnp.float32)
 
 
+@kernel_contract(
+    name="lsh_batched", sites=1, oracle="lsh_project_sums_batched_ref",
+    estimator=None, exactness="tolerance",
+    out_revisit=(1,),           # chunk axis accumulates into (BM, bits)
+    points=({"m": 16, "p": 4096, "bits": 256},
+            {"m": 8, "p": 8192, "bits": 256}),
+    make_args=lambda pt: (
+        (jax.ShapeDtypeStruct((pt["m"], pt["p"]), jnp.float32),),
+        dict(seed=7, bits=pt["bits"])))
 @functools.partial(jax.jit, static_argnames=("bits", "interpret"))
 def lsh_project_sums_batched(x, seed, *, bits: int = 256,
                              interpret: bool = True):

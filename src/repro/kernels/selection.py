@@ -65,6 +65,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.analysis.registry import kernel_contract
+
 BM_SEL = 8          # row block (f32 sublane width)
 BM_SEL_TILED = 128  # row block of the column-tiled kernel
 BK_SEL = 512        # column tile of the column-tiled kernel
@@ -145,6 +147,34 @@ def _select_kernel(a_ref, b_ref, s_ref, ids_ref, w_ref, *, bits: int,
     w_ref[...] = vals
 
 
+# --- repro.analysis contract helpers (DESIGN.md §12) -----------------------
+def _select_point_args(pt):
+    """Abstract (ShapeDtypeStruct) args for a {m, bits} shape point."""
+    w = pt["bits"] // 32
+    args = (jax.ShapeDtypeStruct((pt["m"], w), jnp.uint32),
+            jax.ShapeDtypeStruct((pt["m"],), jnp.float32))
+    return args, dict(bits=pt["bits"], gamma=1.0, num_neighbors=16)
+
+
+def _select_vmem_extra(site, pt):
+    """Kernel-internal intermediates beyond the blocks, from the
+    CAPTURED shapes: unpacked ±1 row/column codes + the (BM, M)
+    weight tile (see the VMEM paragraph in the module docstring)."""
+    bm, w = site.in_specs[0].block_shape
+    mp = site.in_specs[1].block_shape[0]
+    bits_tot = w * 32
+    return (bm + mp) * bits_tot * 4 + bm * mp * 4
+
+
+@kernel_contract(
+    name="selection_oneshot", sites=1, oracle="fused_select_ref",
+    estimator="selection_vmem_bytes", exactness="bit_exact",
+    out_revisit=(),
+    points=({"m": 256, "bits": 256}, {"m": 1024, "bits": 256},
+            {"m": 768, "bits": 512}),
+    make_args=_select_point_args,
+    estimator_kwargs=lambda pt: {"m": pt["m"], "bits_tot": pt["bits"]},
+    vmem_extra=_select_vmem_extra, slack=0.08)
 @functools.partial(jax.jit, static_argnames=(
     "bits", "gamma", "num_neighbors", "use_lsh", "use_rank", "interpret"))
 def fused_select(codes, scores, *, bits: int, gamma: float,
@@ -217,6 +247,24 @@ def _select_tiled_kernel(a_ref, b_ref, s_ref, ids_ref, w_ref,
         w_ref[...] = vals_scr[...]
 
 
+def _select_tiled_vmem_extra(site, pt):
+    """Unpacked ±1 row/column-tile codes + the (BM, BK) weight tile,
+    from the captured block shapes — O(tile), independent of M."""
+    bm, w = site.in_specs[0].block_shape
+    bk = site.in_specs[1].block_shape[0]
+    bits_tot = w * 32
+    return (bm + bk) * bits_tot * 4 + bm * bk * 4
+
+
+@kernel_contract(
+    name="selection_tiled", sites=1, oracle="fused_select_ref",
+    estimator="selection_tiled_vmem_bytes", exactness="bit_exact",
+    out_revisit=(1,),           # column-tile axis j accumulates top-N
+    points=({"m": 1024, "bits": 256}, {"m": 2048, "bits": 256},
+            {"m": 4096, "bits": 512}),
+    make_args=_select_point_args,
+    estimator_kwargs=lambda pt: {"bits_tot": pt["bits"]},
+    vmem_extra=_select_tiled_vmem_extra, slack=0.10)
 @functools.partial(jax.jit, static_argnames=(
     "bits", "gamma", "num_neighbors", "use_lsh", "use_rank", "interpret",
     "block_m", "block_k"))
@@ -317,6 +365,33 @@ def _select_ann_kernel(a_ref, c_ref, ci_ref, cs_ref, ids_ref, w_ref,
         w_ref[...] = vals_scr[...]
 
 
+def _select_ann_point_args(pt):
+    w = pt["bits"] // 32
+    args = (jax.ShapeDtypeStruct((pt["m"], w), jnp.uint32),
+            jax.ShapeDtypeStruct((pt["m"],), jnp.float32),
+            jax.ShapeDtypeStruct((pt["m"], pt["k"]), jnp.int32))
+    return args, dict(bits=pt["bits"], gamma=1.0, num_neighbors=16)
+
+
+def _select_ann_vmem_extra(site, pt):
+    """Unpacked ±1 row codes + per-row unpacked candidate codes + the
+    (BM, BK) weight tile, from the captured block shapes."""
+    bm, w = site.in_specs[0].block_shape
+    bk = site.in_specs[1].block_shape[1]
+    bits_tot = w * 32
+    return (bm + bm * bk) * bits_tot * 4 + bm * bk * 4
+
+
+@kernel_contract(
+    name="selection_ann", sites=1, oracle="ann_select_ref",
+    estimator="ann_vmem_bytes", exactness="bit_exact",
+    out_revisit=(1,),           # candidate-tile axis j accumulates top-N
+    points=({"m": 512, "k": 256, "bits": 256},
+            {"m": 1024, "k": 512, "bits": 256},
+            {"m": 512, "k": 256, "bits": 512}),
+    make_args=_select_ann_point_args,
+    estimator_kwargs=lambda pt: {"bits_tot": pt["bits"]},
+    vmem_extra=_select_ann_vmem_extra, slack=0.08)
 @functools.partial(jax.jit, static_argnames=(
     "bits", "gamma", "num_neighbors", "use_lsh", "use_rank", "interpret",
     "block_m", "block_k"))

@@ -158,7 +158,8 @@ def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
     return 2.0 * n * shape.global_batch          # decode: one token / seq
 
 
-def _counts(compiled) -> Dict[str, Any]:
+def _counts(compiled) -> Dict[str, Any]:  # analysis: host-ok
+    # compiler cost stats, not device values — nothing to sync
     cost = compiled.cost_analysis() or {}
     coll = collective_stats(compiled.as_text())
     return {"flops": float(cost.get("flops", 0.0)),

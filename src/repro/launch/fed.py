@@ -45,7 +45,9 @@ def chain_publisher(chain: Blockchain, num_clients: int):
     period's gossip epochs, so one block per reselection is the
     complete record)."""
 
-    def publish(round_idx: int, state) -> None:
+    def publish(round_idx: int, state) -> None:  # analysis: host-ok
+        # intentional device->host pull, once per reselection period:
+        # the ledger records announcements, not device arrays (§8)
         codes = np.asarray(state.codes)
         rankings = np.asarray(state.rankings)
         ann = {i: {"lsh": lsh_code_hex(codes[i]),
@@ -230,6 +232,7 @@ def dryrun_fed_round(num_clients: int = 256, arch: str = "phi3-medium-14b",
         "reselect_every": reselect_every,
         "attack": attack,
         "mesh": "16x16",
+        # analysis: host-ok — AOT cost_analysis dict, no device value
         "flops_per_device": float(cost.get("flops", 0)),
         "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
         "ok": True}, indent=1))

@@ -26,7 +26,7 @@ def serve(arch: str, *, batch: int = 4, prompt_len: int = 32,
         cfg = cfg.reduced()
     key = jax.random.PRNGKey(seed)
     params = init_params(cfg, key)
-    rs = np.random.RandomState(seed)
+    rs = np.random.RandomState(seed)  # analysis: host-ok (host prompt rng)
     prompts = {"tokens": jnp.asarray(
         rs.randint(0, cfg.vocab_size, (batch, prompt_len)), jnp.int32)}
     prompts.update({k: jnp.asarray(v) for k, v in
@@ -57,6 +57,7 @@ def serve(arch: str, *, batch: int = 4, prompt_len: int = 32,
         out.append(tok)
     gen = jnp.stack(out, axis=1)
     t_decode = time.time() - t0
+    # analysis: host-ok — the generated tokens ARE the result
     return {"generated": np.asarray(gen),
             "prefill_s": t_prefill,
             "decode_tok_per_s": batch * (max_new - 1) / max(t_decode, 1e-9)}

@@ -50,11 +50,13 @@ def train(arch: str, *, steps: int = 50, batch: int = 8, seq: int = 128,
         batch_j = {k: jnp.asarray(v) for k, v in batch_np.items()}
         params, opt_state, metrics = step_fn(params, opt_state, batch_j)
         if step % log_every == 0 or step == steps - 1:
+            # analysis: host-ok — metric sync gated behind log_every
             loss = float(metrics["loss"])
+            gnorm = float(metrics["grad_norm"])  # analysis: host-ok
             history.append({"step": step, "loss": loss,
-                            "grad_norm": float(metrics["grad_norm"])})
+                            "grad_norm": gnorm})
             print(f"step {step:5d} loss {loss:8.4f} "
-                  f"gnorm {float(metrics['grad_norm']):7.3f} "
+                  f"gnorm {gnorm:7.3f} "
                   f"({time.time() - t0:.1f}s)", flush=True)
         if ckpt_dir and ckpt_every and (step + 1) % ckpt_every == 0:
             ckpt.save(ckpt_dir, step + 1, (params, opt_state))

@@ -1,0 +1,30 @@
+"""Seeded-bad fixture: `block-mismatch` — the in_spec's block is
+rank-1 against a rank-2 operand, and the kernel body takes three refs
+while the launch binds 1 input + 1 output = 2."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.analysis.registry import kernel_contract
+
+
+def _bad_kernel(x_ref, y_ref, o_ref):   # BUG: launch binds only 2 refs
+    o_ref[...] = x_ref[...]
+
+
+@kernel_contract(
+    name="fixture_block_mismatch", sites=1, oracle=None, estimator=None,
+    exactness="bit_exact", out_revisit=(),
+    points=({"m": 32},),
+    make_args=lambda pt: (
+        (jax.ShapeDtypeStruct((pt["m"], 128), jnp.float32),), {}))
+def mismatch(x):
+    m, n = x.shape
+    return pl.pallas_call(
+        _bad_kernel,
+        grid=(m // 8,),
+        in_specs=[pl.BlockSpec((n,), lambda i: (0,))],   # BUG: rank 1
+        out_specs=pl.BlockSpec((8, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x)

@@ -1,0 +1,36 @@
+"""Seeded-bad fixture: `estimator-drift` — the declared VMEM estimator
+claims 4x the bytes the captured BlockSpecs imply (the §10 drift bug
+class: a retuned kernel whose budget formula was not updated)."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.analysis.registry import kernel_contract
+
+
+def _copy_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def _lying_estimator(m: int, n: int) -> int:
+    return 4 * (2 * 8 * n * 4)          # BUG: 4x the real working set
+
+
+@kernel_contract(
+    name="fixture_estimator_drift", sites=1, oracle=None,
+    estimator=_lying_estimator, exactness="bit_exact", out_revisit=(),
+    points=({"m": 32, "n": 128},),
+    make_args=lambda pt: (
+        (jax.ShapeDtypeStruct((pt["m"], pt["n"]), jnp.float32),), {}),
+    estimator_kwargs=lambda pt: {"m": pt["m"], "n": pt["n"]},
+    slack=0.10)
+def drift(x):
+    m, n = x.shape
+    return pl.pallas_call(
+        _copy_kernel,
+        grid=(m // 8,),
+        in_specs=[pl.BlockSpec((8, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((8, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x)

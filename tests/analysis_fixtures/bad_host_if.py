@@ -1,0 +1,11 @@
+"""Seeded-bad fixture: `host-if` — a Python `if` on a traced boolean
+inside a jitted function (freezes the branch at trace time or raises
+TracerBoolConversionError; the lint catches it statically)."""
+import jax
+
+
+@jax.jit
+def positive_part(x):
+    if x.sum() > 0:                     # BUG: branch on a tracer
+        return x
+    return -x

@@ -1,0 +1,29 @@
+"""Seeded-bad fixture: `tile-gap` — the grid stops at half the row
+blocks, so the lower half of the output is never written."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.analysis.registry import kernel_contract
+
+
+def _copy_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+@kernel_contract(
+    name="fixture_tile_gap", sites=1, oracle=None, estimator=None,
+    exactness="bit_exact", out_revisit=(),
+    points=({"m": 32},),
+    make_args=lambda pt: (
+        (jax.ShapeDtypeStruct((pt["m"], 128), jnp.float32),), {}))
+def gap(x):
+    m, n = x.shape
+    return pl.pallas_call(
+        _copy_kernel,
+        grid=(m // 8 // 2,),        # BUG: half the row blocks
+        in_specs=[pl.BlockSpec((8, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((8, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x)

@@ -1,0 +1,31 @@
+"""Seeded-bad fixture: `tile-race` — the output index map collapses
+pairs of grid points onto the same block with no declared revisit
+axis, so two programs race on every written block (and the collapsed
+mapping also leaves the tail blocks unwritten)."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.analysis.registry import kernel_contract
+
+
+def _copy_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+@kernel_contract(
+    name="fixture_tile_race", sites=1, oracle=None, estimator=None,
+    exactness="bit_exact", out_revisit=(),    # no axis declared
+    points=({"m": 32},),
+    make_args=lambda pt: (
+        (jax.ShapeDtypeStruct((pt["m"], 128), jnp.float32),), {}))
+def race(x):
+    m, n = x.shape
+    return pl.pallas_call(
+        _copy_kernel,
+        grid=(m // 8,),
+        in_specs=[pl.BlockSpec((8, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((8, n), lambda i: (i // 2, 0)),  # BUG
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x)

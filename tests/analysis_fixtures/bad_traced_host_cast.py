@@ -1,0 +1,13 @@
+"""Seeded-bad fixture: `traced-host-cast` — float() on a traced
+reduction inside a jitted function (crashes at trace time in the real
+world; the lint catches it without tracing)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("scale",))
+def scale_by_mean(x, *, scale: float = 2.0):
+    total = float(jnp.sum(x))           # BUG: host cast on a tracer
+    return x * (total * scale)

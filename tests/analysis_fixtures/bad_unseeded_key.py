@@ -1,0 +1,10 @@
+"""Seeded-bad fixture: `unseeded-key` — a constant PRNGKey built
+inside a jitted function, so the "random" draw is identical every
+round (PR 1's dead-seed bug class)."""
+import jax
+
+
+@jax.jit
+def add_noise(x):
+    key = jax.random.PRNGKey(0)         # BUG: round-independent key
+    return x + jax.random.normal(key, x.shape)
