@@ -10,7 +10,10 @@
 # attacks firing inside a gossip segment) + the §11 ANN selection
 # smoke (sub-quadratic candidate path at M=16384 — beyond the exact
 # kernels' comfortable range — plus recall and the one-bucket
-# bit-exact fallback) + a 1024-client dryrun on the tiled backend
+# bit-exact fallback) + the §13 continuous-service smoke (3 churned
+# reselection periods, kill after 2, bit-exact resume + ledger
+# verification across the restart, batched personalized serving)
+# + a 1024-client dryrun on the tiled backend
 # (the 10^4-client scaling path lowered under sharding, in a fresh
 # process because jax locks the device count at first init).
 # The static-analysis gate (DESIGN.md §12) runs FIRST: kernel-contract
@@ -35,6 +38,9 @@ python scripts/tiled_smoke.py
 
 echo "== sub-quadratic ANN selection smoke (DESIGN.md §11) =="
 python scripts/ann_smoke.py
+
+echo "== continuous federation service: churn + kill/resume (DESIGN.md §13) =="
+python scripts/service_smoke.py
 
 echo "== attack-resilience example (smoke) =="
 python examples/attack_resilience.py --clients 6 --rounds 3 \

@@ -1,0 +1,141 @@
+"""CI smoke for the continuous federation service (DESIGN.md §13):
+the ISSUE-8 acceptance scenario end-to-end, at fixture scale.
+
+Runs a 3-period churned service (1 leave at period 1, 1 rejoin at
+period 2) twice:
+
+  A. straight through, and
+  B. killed after period 2 — a FRESH process-equivalent resume
+     (template state, everything else restored from disk via
+     `resume_service`) finishes period 3.
+
+Asserts the acceptance criteria:
+
+  * per-round metrics of B are IDENTICAL (==, not approximately) to A;
+  * the final ServiceState of B is bitwise equal to A's;
+  * `verify_chain` holds across the restart boundary, and the two
+    ledgers record the same protocol content (payloads; hashes differ
+    by wall-clock timestamps);
+  * checkpoint retention pruned to keep_last_k snapshots;
+  * the serving front answers batched requests from the live
+    per-client personalized models, matching direct application.
+
+Usage: PYTHONPATH=src python scripts/service_smoke.py
+"""
+import functools
+import os
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.paper_models import ClientModelConfig, FedConfig
+from repro.core import init_state
+from repro.models import apply_client_model, init_client_model
+from repro.optim import adam
+from repro.service import (ChurnEvent, PersonalizedServer, ServiceConfig,
+                           init_service_state, resume_service, run_service)
+
+
+def build(seed=0, m=6, d=16, classes=3):
+    rs = np.random.RandomState(seed)
+    mcfg = ClientModelConfig("smoke-mlp", "mlp", (d,), classes,
+                             hidden=(32,))
+    fed = FedConfig(num_clients=m, num_neighbors=3, top_k=2,
+                    local_steps=3, local_batch=16, lsh_bits=128, lr=1e-2)
+    centers = rs.randn(classes, d) * 2.5
+
+    def gen(n, props):
+        y = rs.choice(classes, size=n, p=props)
+        return (centers[y] + rs.randn(n, d)).astype("f"), y.astype("i4")
+
+    packs = {k: [] for k in ("x_train", "y_train", "x_ref", "y_ref",
+                             "x_test", "y_test")}
+    for _ in range(m):
+        props = rs.dirichlet(np.ones(classes) * 0.8)
+        props = 0.7 * props + 0.3 / classes
+        for split, (n, p) in {"train": (40, props),
+                              "ref": (12, np.ones(classes) / classes),
+                              "test": (20, props)}.items():
+            x, y = gen(n, p)
+            packs[f"x_{split}"].append(x)
+            packs[f"y_{split}"].append(y)
+    data = {k: jnp.asarray(np.stack(v)) for k, v in packs.items()}
+    apply_fn = functools.partial(apply_client_model, mcfg)
+    init_fn = lambda k: init_client_model(mcfg, k)
+    return fed, apply_fn, init_fn, adam(fed.lr), data
+
+
+def main():
+    fed, apply_fn, init_fn, opt, data = build()
+    svc = ServiceConfig(reselect_every=3, keep_last_k=2)
+    events = [ChurnEvent(1, "leave", 4), ChurnEvent(2, "join", 4)]
+
+    def fresh():
+        return init_service_state(
+            init_state(apply_fn, init_fn, opt, fed,
+                       jax.random.PRNGKey(0)), svc)
+
+    with tempfile.TemporaryDirectory() as tmp:
+        dir_a, dir_b = os.path.join(tmp, "a"), os.path.join(tmp, "b")
+        t0 = time.time()
+        s_a, chain_a, hist_a = run_service(
+            apply_fn, opt, fed, svc, fresh(), data, periods=3,
+            events=events, ckpt_dir=dir_a, log=print)
+        assert chain_a.verify_chain(), "uninterrupted ledger broken"
+
+        # run B: kill after period 2, resume from disk, finish
+        run_service(apply_fn, opt, fed, svc, fresh(), data, periods=2,
+                    events=events, ckpt_dir=dir_b)
+        s_r, chain_r, p0 = resume_service(dir_b, fresh())
+        assert p0 == 2, f"expected resume at period 2, got {p0}"
+        s_b, chain_b, hist_tail = run_service(
+            apply_fn, opt, fed, svc, s_r, data, periods=3,
+            events=events, chain=chain_r, ckpt_dir=dir_b,
+            start_period=p0, log=print)
+
+        # acceptance: metric continuity, IDENTICAL not approximate
+        tail_a = hist_a[-svc.reselect_every:]
+        assert hist_tail == tail_a, "resumed metrics diverged"
+        for a, b in zip(jax.tree.leaves(s_a), jax.tree.leaves(s_b)):
+            assert np.array_equal(np.asarray(a), np.asarray(b)), \
+                "resumed final state not bitwise equal"
+        assert chain_b.verify_chain(), \
+            "ledger fails verification across the restart boundary"
+        assert [blk.payload for blk in chain_a.blocks] == \
+            [blk.payload for blk in chain_b.blocks], \
+            "resumed ledger recorded different protocol content"
+        snaps = sorted(f for f in os.listdir(dir_b)
+                       if f.endswith(".npz"))
+        assert len(snaps) == svc.keep_last_k, \
+            f"retention kept {snaps}, wanted {svc.keep_last_k}"
+
+        # churn actually happened (period 1 ran 5/6 active)
+        fracs = [h["active_frac"] for h in hist_a]
+        assert fracs[0] == 1.0 and fracs[svc.reselect_every] < 1.0 \
+            and fracs[-1] == 1.0, f"churn not visible: {fracs}"
+
+        # the serving front, on the final personalized models
+        server = PersonalizedServer(apply_fn, s_b.fed.params)
+        for r in range(12):
+            cid = r % fed.num_clients
+            server.submit(cid, data["x_test"][cid, r % 20])
+        got = server.flush()
+        direct = apply_fn(
+            jax.tree.map(lambda p: p[2], s_b.fed.params),
+            data["x_test"][2, 2][None])[0]
+        assert np.allclose(got[2], np.asarray(direct), atol=1e-5), \
+            "served logits diverge from direct application"
+        stats = server.throughput()
+        print(f"serving: {stats['requests']:.0f} requests, "
+              f"{stats['requests_per_s']:.0f} req/s, "
+              f"p50 {stats['p50_latency_s'] * 1e3:.2f} ms")
+        print(f"service smoke OK ({time.time() - t0:.1f}s): "
+              "churned kill/resume run identical to uninterrupted, "
+              "ledger verified across restart")
+
+
+if __name__ == "__main__":
+    main()

@@ -24,7 +24,7 @@ from typing import List, Optional
 from repro.analysis.registry import capture_registrations
 from repro.analysis.report import Finding, render_json, render_text
 
-DEFAULT_LINT_DIRS = ("core", "kernels", "launch")
+DEFAULT_LINT_DIRS = ("core", "kernels", "launch", "service")
 
 
 def _default_lint_paths() -> List[str]:

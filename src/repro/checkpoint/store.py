@@ -36,12 +36,26 @@ def _seg(p) -> str:
     return str(p)
 
 
-def save(ckpt_dir: str, step: int, tree: Any) -> str:
+def save(ckpt_dir: str, step: int, tree: Any, *,
+         keep_last_k: Optional[int] = None) -> str:
+    """Atomic snapshot; with `keep_last_k`, prune older step_*.npz AFTER
+    the new file is durably in place (a continuously-running service
+    would otherwise accumulate one snapshot per period forever). The
+    newest k survive by step number; pruning never touches other files
+    (e.g. the service's chain.json lives in the same directory)."""
+    if keep_last_k is not None and keep_last_k < 1:
+        raise ValueError(f"keep_last_k must be >= 1, got {keep_last_k}")
     os.makedirs(ckpt_dir, exist_ok=True)
     path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
     tmp = path + ".tmp.npz"          # .npz suffix so np.savez doesn't append
     np.savez(tmp, **_flatten(tree))
     os.replace(tmp, path)
+    if keep_last_k is not None:
+        steps = sorted(
+            int(m.group(1)) for f in os.listdir(ckpt_dir)
+            if (m := re.match(r"step_(\d+)\.npz$", f)))
+        for old in steps[:-keep_last_k]:
+            os.remove(os.path.join(ckpt_dir, f"step_{old:08d}.npz"))
     return path
 
 

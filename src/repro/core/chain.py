@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import hashlib
 import json
+import os
 import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
@@ -134,6 +135,29 @@ class Blockchain:
                 return b
         return None
 
+    # -- durable form (the service's kill/resume path, DESIGN.md §13) --
+    def to_json(self) -> str:
+        """Full ledger as canonical JSON. The stored hashes are the
+        ORIGINAL ones — verify_chain recomputes over the deserialized
+        payloads, so a tampered file fails verification after load
+        instead of laundering fresh hashes."""
+        return json.dumps([{
+            "index": b.index, "prev_hash": b.prev_hash,
+            "payload": b.payload, "timestamp": b.timestamp,
+            "hash": b.hash,
+        } for b in self.blocks], sort_keys=True)
+
+    @classmethod
+    def from_json(cls, text: str) -> "Blockchain":
+        chain = cls.__new__(cls)
+        chain.blocks = [
+            Block(d["index"], d["prev_hash"], d["payload"],
+                  timestamp=d["timestamp"], hash=d["hash"])
+            for d in json.loads(text)]
+        if not chain.blocks:
+            raise ValueError("serialized chain has no genesis block")
+        return chain
+
 
 def verify_reveal(commitment_hex: str, revealed_ranking, salt: int = 0) -> bool:
     """Eq. (10): recompute the hash of the revealed ranking."""
@@ -143,3 +167,21 @@ def verify_reveal(commitment_hex: str, revealed_ranking, salt: int = 0) -> bool:
 def lsh_code_hex(code) -> str:
     # analysis: host-ok — announcement serialization for the host ledger
     return np.asarray(code, np.uint32).tobytes().hex()
+
+
+def save_chain(path: str, chain: Blockchain) -> str:
+    """Atomically persist the ledger (tmp + os.replace, the
+    checkpoint.store discipline: a crash mid-write never truncates the
+    previous good file)."""
+    tmp = path + ".tmp"
+    with open(tmp, "w", encoding="utf-8") as fh:
+        fh.write(chain.to_json())
+    os.replace(tmp, path)
+    return path
+
+
+def load_chain(path: str) -> Blockchain:
+    """Restore a persisted ledger. Integrity is the caller's call to
+    `verify_chain()` — the service driver refuses to resume without it."""
+    with open(path, "r", encoding="utf-8") as fh:
+        return Blockchain.from_json(fh.read())

@@ -55,7 +55,7 @@ def select_neighbors(weights, num_neighbors: int):
 
 
 def select_partners(codes, scores, fed, *, rng=None, backend=None,
-                    tiling=None, seed=0):
+                    tiling=None, seed=0, active=None):
     """Eq. 6-8 + top-N in one call: the WPFed partner-selection step.
 
     codes: (M, W) uint32 published LSH codes; scores: (M,) f32 ranking
@@ -81,6 +81,16 @@ def select_partners(codes, scores, fed, *, rng=None, backend=None,
     `backends.resolve_selection`, so approximation is never silent at
     small M.
 
+    `active` (M,) bool excludes departed clients (the service layer's
+    churn-as-masking, DESIGN.md §13) by forcing their score column to
+    -inf BEFORE backend dispatch: -inf survives the Eq. 8 multiply in
+    every backend (oracle / kernel / tiled / ann — IEEE -inf times a
+    positive finite weight stays -inf) and `isfinite(top_w)` already
+    masks it out of the result, so no backend needs a mask argument.
+    Requires use_rank=True — with Eq. 8 ignoring scores there is no
+    column to carry the exclusion (and the ablations model a fixed
+    cohort anyway).
+
     Returns (ids (M, N) int32, sel_mask (M, N) bool). With N <= M-1
     every selected id is a real, non-self client and the mask is all
     True; the mask exists for degenerate M <= 1 federations (and, on
@@ -89,6 +99,13 @@ def select_partners(codes, scores, fed, *, rng=None, backend=None,
     """
     m = codes.shape[0]
     n = min(fed.num_neighbors, m - 1)
+    if active is not None:
+        if not fed.use_rank:
+            raise ValueError(
+                "select_partners(active=...) requires use_rank=True: "
+                "membership exclusion rides the Eq. 8 score column "
+                "(DESIGN.md §13)")
+        scores = jnp.where(active, scores, -jnp.inf)
     if not fed.use_lsh and not fed.use_rank:
         w = selection_weights(scores, jnp.zeros((m, m), jnp.float32),
                               fed.gamma, use_lsh=False, use_rank=False,

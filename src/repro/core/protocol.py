@@ -84,7 +84,7 @@ def init_state(apply_fn, init_fn, optimizer: Optimizer, fed: FedConfig,
 # phases
 # ---------------------------------------------------------------------------
 def select_phase(state: FedState, fed: FedConfig, *,
-                 rng=None) -> SelectResult:
+                 rng=None, active=None, score_scale=None) -> SelectResult:
     """Steps 1-3: §3.6 reveal verification -> Eq. 7 ranking scores ->
     fused Eq. 6-8 top-N partner selection (DESIGN.md §4). `rng` is
     consumed only by the random-selection ablation (use_lsh=False,
@@ -92,20 +92,33 @@ def select_phase(state: FedState, fed: FedConfig, *,
     "ann", DESIGN.md §11) is seeded from state.round — the same
     per-round discipline as the LSH projection seed in announce_phase,
     so reselection is reproducible, scan-safe, and recomputable by
-    every peer from public information."""
+    every peer from public information.
+
+    The service layer (DESIGN.md §13) threads two optional masks:
+    `active` (M,) bool drops departed clients from BOTH sides of the
+    round — their stale rankings stop counting as Eq. 7 evidence
+    (reporter_mask &= active) and they never enter any peer's top-N
+    (neighbor.select_partners forces their score column to -inf);
+    `score_scale` (M,) f32 multiplies the Eq. 7 scores — the staleness
+    discount for re-joiners whose published codes are periods old.
+    Both default to no-ops, keeping the classic sync round bit-exact."""
     m = fed.num_clients
     if fed.rank_verification:
         reporter_mask = verify.verify_rankings_fnv(
             state.rankings, state.commitments)
     else:
         reporter_mask = jnp.ones((m,), bool)
+    if active is not None:
+        reporter_mask = reporter_mask & active
     scores = ranking.ranking_scores(
         jnp.where(reporter_mask[:, None], state.rankings, -1),
         m, fed.top_k, dedupe=fed.dedupe_rankings)
+    if score_scale is not None:
+        scores = scores * score_scale
     ids, sel_mask = neighbor.select_partners(
         state.codes, scores, fed,
         rng=rng if not (fed.use_lsh or fed.use_rank) else None,
-        seed=state.round)
+        seed=state.round, active=active)
     return SelectResult(ids, sel_mask, scores, reporter_mask)
 
 
@@ -150,10 +163,17 @@ def exchange_phase(apply_fn: Callable, fed: FedConfig, params,
 
 def update_phase(apply_fn: Callable, optimizer: Optimizer, fed: FedConfig,
                  params, opt_state, data: Dict[str, jnp.ndarray],
-                 exch: ExchangeResult, rng):
+                 exch: ExchangeResult, rng, participate=None):
     """Step 6b: per-client local updates on the combined objective
     (Alg. 1 l.19), distilling toward the exchange's aggregated target.
-    Returns (params, opt_state, train_metrics)."""
+    Returns (params, opt_state, train_metrics).
+
+    `participate` (M,) bool freezes non-participants: their params AND
+    optimizer state come back bitwise unchanged (the service layer's
+    departed clients and exhausted per-client gossip budgets,
+    DESIGN.md §13). The update still computes for every padded slot —
+    static shapes — and is then masked out, so `None` (everyone
+    participates) stays bit-exact with the pre-service round."""
     m = fed.num_clients
     upd_keys = jax.vmap(
         lambda i: jax.random.fold_in(rng, i))(jnp.arange(m))
@@ -165,9 +185,17 @@ def update_phase(apply_fn: Callable, optimizer: Optimizer, fed: FedConfig,
         for k in ("x_ref", "y_ref"):
             data_per[k] = jnp.broadcast_to(data[k][0][None],
                                            data[k].shape)
-    return batched_local_update(
+    new_params, new_opt, train_metrics = batched_local_update(
         apply_fn, optimizer, fed, params, opt_state, data_per,
         exch.target_ref, exch.has_target, upd_keys)
+    if participate is not None:
+        def keep(new, old):
+            mask = participate.reshape((m,) + (1,) * (new.ndim - 1))
+            return jnp.where(mask, new, old)
+
+        new_params = jax.tree.map(keep, new_params, params)
+        new_opt = jax.tree.map(keep, new_opt, opt_state)
+    return new_params, new_opt, train_metrics
 
 
 def announce_phase(fed: FedConfig, params, sel: SelectResult,

@@ -44,6 +44,7 @@ from typing import Any, Callable, Dict, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.experimental import io_callback
 
 
 class RoundProgram(NamedTuple):
@@ -112,8 +113,24 @@ def program_round(program: RoundProgram) -> Callable:
     return round_fn
 
 
+def _stream_metrics(metrics_tap: Callable, m: Dict[str, Any]) -> None:
+    """Emit one round's scalar metrics to the host from INSIDE a
+    compiled segment via an ordered `io_callback` (DESIGN.md §13): a
+    continuous-service operator sees rounds as they complete instead of
+    once per reselection period. Ordered so taps arrive in round order;
+    non-scalar metrics (neighbor_ids, masks) stay on device."""
+    scalars = {k: jnp.asarray(v) for k, v in m.items()}
+    scalars = {k: v for k, v in scalars.items() if v.ndim == 0}
+
+    def tap(s):  # analysis: host-ok — io_callback target runs on host
+        metrics_tap({k: v.item() for k, v in s.items()})
+
+    io_callback(tap, None, scalars, ordered=True)
+
+
 def make_segment_fn(program: RoundProgram, length: int, *,
-                    eval_fn: Optional[Callable] = None) -> Callable:
+                    eval_fn: Optional[Callable] = None,
+                    metrics_tap: Optional[Callable] = None) -> Callable:
     """Compile-ready body for one reselection period of `length`
     rounds: the global round, then length-1 gossip epochs under
     `jax.lax.scan` threading (state, cache). Returns
@@ -123,6 +140,11 @@ def make_segment_fn(program: RoundProgram, length: int, *,
     `eval_fn(state, data) -> dict` (jittable) is merged into each
     round's metrics — this keeps per-round evaluation inside the
     compiled segment instead of forcing a host sync per round.
+
+    `metrics_tap(scalars: dict) -> None` (host function) additionally
+    receives each round's scalar metrics mid-segment through an
+    ordered `io_callback` — the service driver's live progress stream
+    (`_stream_metrics`). Omitting it keeps the segment callback-free.
     """
     if length < 1:
         raise ValueError(f"segment length must be >= 1, got {length}")
@@ -135,6 +157,8 @@ def make_segment_fn(program: RoundProgram, length: int, *,
         state, cache, m0 = program.global_round(state, data)
         if eval_fn is not None:
             m0 = {**m0, **eval_fn(state, data)}
+        if metrics_tap is not None:
+            _stream_metrics(metrics_tap, m0)
         if length == 1:
             # no scan: the segment IS the classic sync round
             # (bit-exactness with the pre-engine round is regression-
@@ -146,6 +170,8 @@ def make_segment_fn(program: RoundProgram, length: int, *,
             st, ca, m = program.gossip_round(st, data, ca)
             if eval_fn is not None:
                 m = {**m, **eval_fn(st, data)}
+            if metrics_tap is not None:
+                _stream_metrics(metrics_tap, m)
             return (st, ca), m
 
         (state, _cache), ms = jax.lax.scan(
@@ -156,6 +182,24 @@ def make_segment_fn(program: RoundProgram, length: int, *,
         return state, metrics
 
     return seg_fn
+
+
+def extract_history(metrics, r0, length):  # analysis: host-ok (see below)
+    """Stacked per-round segment metrics -> one plain-Python dict per
+    round (scalar metrics only, plus the absolute "round" index).
+    Intentional host extraction: callers run it once per reselection
+    period, after `jax.block_until_ready` (run_rounds here, the
+    continuous service driver in `repro.service.driver`)."""
+    history: List[Dict[str, Any]] = []
+    for i in range(length):
+        entry: Dict[str, Any] = {}
+        for k, v in metrics.items():
+            if getattr(v, "ndim", None) == 1:  # per-round scalar
+                is_int = jnp.issubdtype(v.dtype, jnp.integer)
+                entry[k] = int(v[i]) if is_int else float(v[i])
+        entry["round"] = r0 + i
+        history.append(entry)
+    return history
 
 
 def run_rounds(program: RoundProgram, state, data, *, rounds: int,
@@ -190,16 +234,7 @@ def run_rounds(program: RoundProgram, state, data, *, rounds: int,
         dt = time.time() - t0
         if on_reselect is not None:
             on_reselect(r0, state)
-        for i in range(length):
-            entry: Dict[str, Any] = {}
-            for k, v in metrics.items():
-                if getattr(v, "ndim", None) == 1:  # per-round scalar
-                    is_int = jnp.issubdtype(v.dtype, jnp.integer)
-                    # history extraction runs once per reselection
-                    # period, after block_until_ready: analysis: host-ok
-                    entry[k] = int(v[i]) if is_int else float(v[i])
-            entry["round"] = r0 + i
-            history.append(entry)
+        history.extend(extract_history(metrics, r0, length))
         if log is not None:
             last = history[-1]
             parts = [f"{k} {last[k]:.4f}" for k in ("acc", "mean_loss")

@@ -34,6 +34,8 @@ from repro.core.chain import Blockchain, lsh_code_hex, sha256_commit
 from repro.data import DATASETS
 from repro.models import apply_client_model, init_client_model
 from repro.optim import adam
+from repro.service import (ServiceConfig, init_service_state, parse_events,
+                           resume_service, run_service)
 
 MODEL_FOR = {"mnist": mnist_cnn, "aecg": aecg_tcn, "seeg": seeg_tcn}
 
@@ -132,6 +134,65 @@ def run_federation(dataset: str = "mnist", rounds: int = 10,
         on_reselect=chain_publisher(chain, fed.num_clients), log=log)
     assert chain.verify_chain(), "host ledger integrity violated"
     return state, history
+
+
+def run_service_federation(dataset: str = "mnist", periods: int = 3,
+                           reselect_every: int = 4, num_clients: int = 0,
+                           seed: int = 0, churn: str = "",
+                           gossip_counts: str = "",
+                           staleness_lambda: float = 0.5,
+                           checkpoint_every: int = 1, keep_last_k: int = 3,
+                           ckpt_dir: str = None, resume: bool = False,
+                           log=print):
+    """The continuous-service scenario (DESIGN.md §13): the same
+    construction as `run_federation`, driven by `repro.service` instead
+    of run_rounds — unbounded reselection periods, churn events between
+    them (`churn` = "period:kind:client,..."), per-client gossip
+    budgets (`gossip_counts` = comma list of G_i), durable checkpoints
+    under `ckpt_dir`, and `--resume` picking up a killed service from
+    its latest snapshot (bit-exact, verified against the ledger).
+    Evaluation reports the ACTIVE cohort — departed clients' frozen
+    models don't dilute the service metric. Returns
+    (state, chain, history)."""
+    ds_fn = DATASETS[dataset]
+    ds = ds_fn(seed=seed) if num_clients == 0 else \
+        ds_fn(num_clients=num_clients, seed=seed)
+    n_opt, alpha, gamma = PAPER_FED_OPTIMA[dataset]
+    fed = FedConfig(num_clients=ds.num_clients, num_neighbors=n_opt,
+                    alpha=alpha, gamma=gamma,
+                    rounds=periods * reselect_every)
+    svc = ServiceConfig(reselect_every=reselect_every,
+                        staleness_lambda=staleness_lambda,
+                        checkpoint_every=checkpoint_every,
+                        keep_last_k=keep_last_k)
+    mcfg = MODEL_FOR[dataset]()
+    apply_fn = functools.partial(apply_client_model, mcfg)
+    init_fn = lambda k: init_client_model(mcfg, k)
+    opt = adam(fed.lr)
+    data = {k: jnp.asarray(v) for k, v in ds.stacked().items()}
+    counts = None
+    if gossip_counts:
+        counts = [int(c) for c in gossip_counts.split(",")]
+    template = init_service_state(
+        init_state(apply_fn, init_fn, opt, fed, jax.random.PRNGKey(seed)),
+        svc, gossip_counts=counts)
+    if resume:
+        if not ckpt_dir:
+            raise ValueError("--resume needs --ckpt-dir")
+        state, chain, start_period = resume_service(ckpt_dir, template)
+    else:
+        state, chain, start_period = template, Blockchain(), 0
+    events = parse_events(churn) if churn else []
+    state, chain, history = run_service(
+        apply_fn, opt, fed, svc, state, data, periods=periods,
+        events=events, chain=chain, ckpt_dir=ckpt_dir,
+        start_period=start_period,
+        eval_fn=lambda st, d: {"acc": evaluate(
+            apply_fn, st.fed, d,
+            honest_mask=st.active.astype(jnp.float32))["mean_acc"]},
+        log=log)
+    assert chain.verify_chain(), "host ledger integrity violated"
+    return state, chain, history
 
 
 def dryrun_fed_round(num_clients: int = 256, arch: str = "phi3-medium-14b",
@@ -291,7 +352,42 @@ def main(argv=None):
     ap.add_argument("--attack-start", type=int, default=-1,
                     help="first attacked round (-1 = the threat's "
                          "registry default, e.g. poison's §4.8 warm-up)")
+    ap.add_argument("--service", action="store_true",
+                    help="run the continuous federation service "
+                         "(repro.service, DESIGN.md §13) instead of a "
+                         "fixed-round experiment")
+    ap.add_argument("--periods", type=int, default=3,
+                    help="[service] reselection periods to run")
+    ap.add_argument("--churn", default="",
+                    help="[service] churn events as "
+                         "'period:kind:client,...' e.g. "
+                         "'1:leave:4,2:join:5'")
+    ap.add_argument("--gossip-counts", default="",
+                    help="[service] per-client gossip budgets G_i as a "
+                         "comma list (default: full period for all)")
+    ap.add_argument("--staleness-lambda", type=float, default=0.5,
+                    help="[service] Eq. 8 staleness discount "
+                         "exp(-lambda * code_age)")
+    ap.add_argument("--ckpt-dir", default="",
+                    help="[service] checkpoint directory (durable "
+                         "state + chain.json)")
+    ap.add_argument("--keep-last-k", type=int, default=3,
+                    help="[service] checkpoint retention")
+    ap.add_argument("--resume", action="store_true",
+                    help="[service] resume from the latest checkpoint "
+                         "in --ckpt-dir")
     args = ap.parse_args(argv)
+    if args.service:
+        _, _, history = run_service_federation(
+            args.dataset, periods=args.periods,
+            reselect_every=args.reselect_every or 4,
+            num_clients=args.clients, seed=args.seed, churn=args.churn,
+            gossip_counts=args.gossip_counts,
+            staleness_lambda=args.staleness_lambda,
+            keep_last_k=args.keep_last_k,
+            ckpt_dir=args.ckpt_dir or None, resume=args.resume)
+        print(json.dumps(history[-3:], indent=1))
+        return
     if args.dryrun:
         import os
         assert "xla_force_host_platform_device_count" in \

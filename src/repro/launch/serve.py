@@ -1,11 +1,17 @@
-"""Serving driver: batched prefill + greedy decode on a KV cache.
+"""Serving driver: batched prefill + greedy decode on a KV cache, and
+the federated mode — batched inference from the per-client PERSONALIZED
+models of a live (or checkpointed) federation via
+`repro.service.PersonalizedServer` (DESIGN.md §13).
 
     PYTHONPATH=src python -m repro.launch.serve --arch phi3-medium-14b \
         --reduced --batch 4 --prompt-len 32 --max-new 16
+    PYTHONPATH=src python -m repro.launch.serve --federated \
+        --ckpt-dir /tmp/svc --requests 64
 """
 from __future__ import annotations
 
 import argparse
+import functools
 import time
 
 import jax
@@ -32,20 +38,15 @@ def serve(arch: str, *, batch: int = 4, prompt_len: int = 32,
     prompts.update({k: jnp.asarray(v) for k, v in
                     modality_stub(cfg, batch, rs).items()})
 
+    # ONE prefill, sized for prompt + generation up front (cache_len)
     prefill_step = jax.jit(make_prefill_step(
-        cfg, window_override=window_override))
+        cfg, window_override=window_override,
+        cache_len=prompt_len + max_new))
     serve_step = jax.jit(make_serve_step(
         cfg, window_override=window_override))
 
     t0 = time.time()
-    # size the cache for prompt + generation
-    extra = {k: v for k, v in prompts.items() if k != "tokens"}
-    from repro.models.transformer import prefill as _prefill
-    logits, cache = jax.jit(
-        lambda p, t, e: _prefill(cfg, p, t, e or None,
-                                 cache_len=prompt_len + max_new,
-                                 window_override=window_override)
-    )(params, prompts["tokens"], extra)
+    logits, cache = prefill_step(params, prompts)
     tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
     t_prefill = time.time() - t0
 
@@ -63,15 +64,97 @@ def serve(arch: str, *, batch: int = 4, prompt_len: int = 32,
             "decode_tok_per_s": batch * (max_new - 1) / max(t_decode, 1e-9)}
 
 
+def serve_personalized(dataset="mnist", *, ckpt_dir=None, requests=64,
+                       seed=0, reselect_every=4, num_clients=0,
+                       log=print):
+    """Serve batched inference from the federation's per-client
+    personalized models. With `ckpt_dir`, the models are the live
+    service's latest checkpoint (the kill/resume snapshot doubles as
+    the serving snapshot); without, a fresh (untrained) federation —
+    useful for smoke/bench runs. Requests draw test examples for
+    random ACTIVE clients and batch across them through ONE vmapped
+    forward per bucket (repro.service.serving). Returns the server's
+    throughput summary plus served-prediction accuracy."""
+    from repro.configs.paper_models import FedConfig, PAPER_FED_OPTIMA
+    from repro.core import init_state
+    from repro.data import DATASETS
+    from repro.launch.fed import MODEL_FOR
+    from repro.models import apply_client_model, init_client_model
+    from repro.optim import adam
+    from repro.service import (PersonalizedServer, ServiceConfig,
+                               checkpoint_num_clients,
+                               init_service_state, resume_service)
+    ds_fn = DATASETS[dataset]
+    if ckpt_dir and num_clients == 0:
+        # size the template from the snapshot, not the dataset default:
+        # the checkpointed service fixed M when it started
+        num_clients = checkpoint_num_clients(ckpt_dir)
+    ds = ds_fn(seed=seed) if num_clients == 0 else \
+        ds_fn(num_clients=num_clients, seed=seed)
+    n_opt, alpha, gamma = PAPER_FED_OPTIMA[dataset]
+    fed = FedConfig(num_clients=ds.num_clients, num_neighbors=n_opt,
+                    alpha=alpha, gamma=gamma)
+    mcfg = MODEL_FOR[dataset]()
+    apply_fn = functools.partial(apply_client_model, mcfg)
+    template = init_service_state(
+        init_state(apply_fn, lambda k: init_client_model(mcfg, k),
+                   adam(fed.lr), fed, jax.random.PRNGKey(seed)),
+        ServiceConfig(reselect_every=reselect_every))
+    if ckpt_dir:
+        state, _chain, _next = resume_service(ckpt_dir, template)
+    else:
+        state = template
+    server = PersonalizedServer(apply_fn, state.fed.params)
+    data = {k: jnp.asarray(v) for k, v in ds.stacked().items()}
+    rs = np.random.RandomState(seed)  # analysis: host-ok (request sampling)
+    active_ids = np.flatnonzero(np.asarray(state.active))
+    want = []
+    for _ in range(requests):
+        # analysis: host-ok — request construction at the serving edge
+        cid = int(active_ids[rs.randint(len(active_ids))])
+        t = rs.randint(data["x_test"].shape[1])
+        server.submit(cid, data["x_test"][cid, t])
+        # analysis: host-ok — ground-truth label for the accuracy check
+        want.append(int(data["y_test"][cid, t]))
+    # analysis: host-ok — flushed responses are host arrays already
+    preds = [int(np.argmax(lg)) for lg in server.flush()]
+    # analysis: host-ok — summary over host-side predictions
+    acc = float(np.mean(np.asarray(preds) == np.asarray(want)))
+    res = {**server.throughput(), "served_acc": acc,
+           "num_models": int(active_ids.size)}
+    log(f"served {requests} requests from {active_ids.size} "
+        f"personalized models: {res['requests_per_s']:.0f} req/s, "
+        f"p50 {res['p50_latency_s'] * 1e3:.1f} ms, acc {acc:.3f}")
+    return res
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", default="",
+                    help="transformer zoo arch (decode mode); omit "
+                         "with --federated")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--window", type=int, default=0)
+    ap.add_argument("--federated", action="store_true",
+                    help="serve per-client personalized models from a "
+                         "federation checkpoint (repro.service)")
+    ap.add_argument("--dataset", default="mnist",
+                    choices=["mnist", "aecg", "seeg"])
+    ap.add_argument("--ckpt-dir", default="",
+                    help="[federated] service checkpoint directory "
+                         "(omit for a fresh federation)")
+    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if args.federated:
+        serve_personalized(args.dataset, ckpt_dir=args.ckpt_dir or None,
+                           requests=args.requests, seed=args.seed)
+        return
+    if not args.arch:
+        ap.error("--arch is required unless --federated")
     res = serve(args.arch, batch=args.batch, prompt_len=args.prompt_len,
                 max_new=args.max_new, reduced=not args.full,
                 window_override=args.window)

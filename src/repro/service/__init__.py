@@ -1,0 +1,38 @@
+"""Continuous federation service (DESIGN.md §13).
+
+The experiment runner (`core.rounds.run_rounds`) drives a FIXED cohort
+for a FIXED number of rounds. This package turns the same round-program
+engine into a *service*: an unbounded sequence of reselection periods
+with client churn between periods, staleness-tolerant reselection,
+durable checkpointed state (kill/resume bit-exact), and a serving front
+that answers batched inference requests from the per-client
+personalized models of the live federation.
+
+  membership.py  padded-client-axis churn layer: ServiceState (active
+                 mask, per-client code_age + gossip budget), join/leave
+                 events, participation masks
+  driver.py      the continuous driver: compiled segments inside,
+                 host sync + Blockchain publish + checkpoint between
+                 periods; resume_service restores bit-exact
+  serving.py     PersonalizedServer — batched inference across
+                 per-client personalized models
+"""
+from repro.service.membership import (  # noqa: F401
+    ChurnEvent,
+    ServiceConfig,
+    ServiceState,
+    apply_events,
+    init_service_state,
+    join,
+    leave,
+    parse_events,
+    participation_mask,
+    staleness_discount,
+)
+from repro.service.driver import (  # noqa: F401
+    checkpoint_num_clients,
+    resume_service,
+    run_service,
+    service_program,
+)
+from repro.service.serving import PersonalizedServer  # noqa: F401

@@ -1,0 +1,269 @@
+"""Continuous federation driver (DESIGN.md §13).
+
+An io_callback / host-loop hybrid over the `core.rounds` engine:
+
+  * INSIDE each reselection period everything is one compiled segment
+    (`make_segment_fn` — global round + L-1 gossip epochs under
+    lax.scan). Per-round scalar metrics can additionally stream to the
+    host mid-segment through the engine's ordered-io_callback metrics
+    tap, so a service operator sees rounds as they happen rather than
+    once per period.
+  * BETWEEN periods the host loop runs: churn events apply
+    (membership.apply_events), the period's announcements publish to
+    the host `Blockchain`, and the full ServiceState checkpoints
+    through `checkpoint.store` (with retention) so a killed service
+    resumes bit-exact (`resume_service`).
+
+The service round program wraps the WPFed phases with the membership
+masks:
+
+  global round   §3.6 verification restricted to active reporters,
+                 Eq. 8 scores discounted by exp(-lambda * code_age)
+                 and forced to -inf for departed clients, updates and
+                 announcements applied to active clients only
+                 (inactive slots keep frozen codes/rankings/params and
+                 age one period).
+  gossip epoch   exchange + update against the cached SelectResult,
+                 with the per-client heterogeneous gossip budget G_i:
+                 client i trains only in the first G_i - 1 gossip
+                 epochs of the period.
+
+Unlike `run_rounds`, every period has the same (full) length — a
+service has no final-rounds tail — so exactly ONE segment compiles per
+run and the round axis is unbounded.
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import store
+from repro.configs.paper_models import FedConfig
+from repro.core.chain import (Blockchain, load_chain, lsh_code_hex,
+                              save_chain, sha256_commit)
+from repro.core.protocol import (FedState, _round_metrics, announce_phase,
+                                 exchange_phase, select_phase, update_phase)
+from repro.core.rounds import RoundProgram, extract_history, make_segment_fn
+from repro.service.membership import (ChurnEvent, ServiceConfig,
+                                      ServiceState, apply_events,
+                                      participation_mask,
+                                      staleness_discount, validate_events)
+
+CHAIN_FILE = "chain.json"
+
+
+# ---------------------------------------------------------------------------
+# the service round program
+# ---------------------------------------------------------------------------
+def _service_metrics(sel, exch, train_metrics, state: ServiceState,
+                     participate) -> Dict[str, jnp.ndarray]:
+    """The engine's per-round metrics plus the membership telemetry.
+    Identical structure in the global round and every gossip epoch so
+    a period stacks under lax.scan."""
+    base = _round_metrics(sel, exch, train_metrics, state.fed.round)
+    base["active_frac"] = jnp.mean(state.active.astype(jnp.float32))
+    base["participation_frac"] = jnp.mean(
+        participate.astype(jnp.float32))
+    base["mean_code_age"] = jnp.mean(state.code_age.astype(jnp.float32))
+    return base
+
+
+def service_program(apply_fn: Callable, optimizer, fed: FedConfig,
+                    svc: ServiceConfig) -> RoundProgram:
+    """WPFed as a churn-tolerant service program over ServiceState.
+
+    The decision here is churn-as-masking (DESIGN.md §13): departed
+    clients still occupy their padded slot and their (frozen) params
+    still evaluate inside exchanges that never read them — the price of
+    one static shape per segment. What the masks guarantee:
+
+      * a departed client's Eq. 8 weight is -inf, so it never enters
+        any peer's top-N (and its stale rankings stop counting as
+        Eq. 7 evidence);
+      * a stale re-joiner is selectable, at a score discounted by
+        exp(-staleness_lambda * code_age);
+      * only participants' params / optimizer state advance;
+      * only active clients announce — everyone else's codes,
+        rankings, commitments and code_age carry over frozen.
+    """
+    if not fed.use_rank:
+        raise ValueError(
+            "the service requires use_rank=True: departed clients are "
+            "excluded through the Eq. 8 score column (membership.py)")
+
+    def global_round(state: ServiceState, data
+                     ) -> Tuple[ServiceState, Any, Dict]:
+        st = state.fed
+        rng, rng_sel, rng_upd = jax.random.split(st.rng, 3)
+        sel = select_phase(
+            st, fed, rng=rng_sel, active=state.active,
+            score_scale=staleness_discount(state.code_age,
+                                           svc.staleness_lambda))
+        exch = exchange_phase(apply_fn, fed, st.params, data, sel)
+        params, opt_state, train_metrics = update_phase(
+            apply_fn, optimizer, fed, st.params, st.opt_state, data,
+            exch, rng_upd, participate=state.active)
+        ann = announce_phase(fed, params, sel, exch, st.round)
+        a = state.active
+        new_fed = FedState(
+            params, opt_state,
+            jnp.where(a[:, None], ann.codes, st.codes),
+            jnp.where(a[:, None], ann.rankings, st.rankings),
+            jnp.where(a, ann.commitments, st.commitments),
+            rng, st.round + 1)
+        metrics = _service_metrics(sel, exch, train_metrics, state, a)
+        new_state = ServiceState(
+            new_fed, a, jnp.where(a, 0, state.code_age + 1),
+            state.gossip_count, jnp.asarray(st.round, jnp.int32))
+        return new_state, sel, metrics
+
+    def gossip_round(state: ServiceState, data, sel
+                     ) -> Tuple[ServiceState, Any, Dict]:
+        st = state.fed
+        rng, rng_upd = jax.random.split(st.rng)
+        # 0-based gossip epoch within the period (round already
+        # advanced past the period's global round)
+        epoch = st.round - state.period_start - 1
+        part = participation_mask(state, epoch)
+        exch = exchange_phase(apply_fn, fed, st.params, data, sel)
+        params, opt_state, train_metrics = update_phase(
+            apply_fn, optimizer, fed, st.params, st.opt_state, data,
+            exch, rng_upd, participate=part)
+        metrics = _service_metrics(sel, exch, train_metrics, state, part)
+        new_state = state._replace(fed=st._replace(
+            params=params, opt_state=opt_state, rng=rng,
+            round=st.round + 1))
+        return new_state, sel, metrics
+
+    return RoundProgram("wpfed-service", global_round, gossip_round)
+
+
+# ---------------------------------------------------------------------------
+# ledger + durable state
+# ---------------------------------------------------------------------------
+def service_publisher(chain: Blockchain, num_clients: int) -> Callable:
+    """Publish a period's announcements for ACTIVE clients only —
+    departed clients announce nothing (their last block stands)."""
+
+    def publish(round_idx: int, state: ServiceState):  # analysis: host-ok
+        # intentional device->host pull, once per reselection period:
+        # the ledger records announcements, not device arrays (§8)
+        active = np.asarray(state.active)
+        codes = np.asarray(state.fed.codes)
+        rankings = np.asarray(state.fed.rankings)
+        ann = {i: {"lsh": lsh_code_hex(codes[i]),
+                   "commit": sha256_commit(rankings[i])}
+               for i in range(num_clients) if active[i]}
+        reveals = {i: [int(x) for x in rankings[i]]
+                   for i in range(num_clients) if active[i]}
+        chain.publish_round(round_idx, ann, reveals=reveals)
+
+    return publish
+
+
+def checkpoint_service(ckpt_dir: str, period: int, state: ServiceState,
+                       chain: Blockchain, *, keep_last_k: int) -> str:
+    """One durable snapshot: the full ServiceState pytree as
+    step_<period>.npz (retained to the last k) plus the chain head as
+    chain.json — everything `resume_service` needs."""
+    path = store.save(ckpt_dir, period, state, keep_last_k=keep_last_k)
+    save_chain(os.path.join(ckpt_dir, CHAIN_FILE), chain)
+    return path
+
+
+def checkpoint_num_clients(ckpt_dir: str) -> int:  # analysis: host-ok — reads snapshot file metadata, no device values
+    """Client-axis size M of the latest snapshot, read from the stored
+    active mask WITHOUT a template — lets a serving front rebuild a
+    correctly-shaped template before calling resume_service."""
+    period = store.latest_step(ckpt_dir)
+    if period is None:
+        raise FileNotFoundError(f"no checkpoint under {ckpt_dir!r}")
+    with np.load(os.path.join(ckpt_dir,
+                              f"step_{period:08d}.npz")) as z:
+        return int(z["a:active"].shape[0])
+
+
+def resume_service(ckpt_dir: str, like: ServiceState
+                   ) -> Tuple[ServiceState, Blockchain, int]:
+    """Restore (state, chain, next_period) from the latest checkpoint.
+
+    `like` is a template ServiceState (same configs/shapes as the run
+    being resumed — rebuild it with init_service_state). The restored
+    chain must verify BEFORE the service continues: a resume from a
+    tampered ledger is a trust violation, not a degraded start."""
+    period = store.latest_step(ckpt_dir)
+    if period is None:
+        raise FileNotFoundError(f"no checkpoint under {ckpt_dir!r}")
+    # restore() hands back numpy leaves; put them on device so the
+    # resumed state drops into the compiled segment unchanged
+    state = jax.tree.map(jnp.asarray, store.restore(ckpt_dir, period, like))
+    chain = load_chain(os.path.join(ckpt_dir, CHAIN_FILE))
+    if not chain.verify_chain():
+        raise ValueError(
+            f"restored ledger fails verify_chain ({ckpt_dir!r})")
+    return state, chain, period + 1
+
+
+# ---------------------------------------------------------------------------
+# the continuous driver
+# ---------------------------------------------------------------------------
+def run_service(apply_fn: Callable, optimizer, fed: FedConfig,
+                svc: ServiceConfig, state: ServiceState, data, *,
+                periods: int, events: Sequence[ChurnEvent] = (),
+                chain: Optional[Blockchain] = None,
+                ckpt_dir: Optional[str] = None, start_period: int = 0,
+                eval_fn: Optional[Callable] = None,
+                metrics_tap: Optional[Callable] = None,
+                log: Optional[Callable] = None
+                ) -> Tuple[ServiceState, Blockchain, List[Dict]]:
+    """Drive reselection periods `start_period .. periods-1`.
+
+    Per period: apply churn events -> run ONE compiled segment of
+    svc.reselect_every rounds -> publish active announcements to the
+    ledger -> checkpoint (every svc.checkpoint_every periods, retaining
+    svc.keep_last_k snapshots). `metrics_tap(scalars_dict)` streams
+    per-round scalars from INSIDE the compiled segment (ordered
+    io_callback); the returned history is extracted from the stacked
+    period metrics after the host sync, exactly like run_rounds.
+
+    Restart recipe: rebuild (fed, svc, state-template, data, events)
+    from the same configuration, then
+    `state, chain, p0 = resume_service(ckpt_dir, template)` and call
+    run_service again with start_period=p0 — per-round metrics are
+    identical to the uninterrupted run (regression-tested).
+    """
+    events = validate_events(events, fed.num_clients)
+    chain = chain if chain is not None else Blockchain()
+    publish = service_publisher(chain, fed.num_clients)
+    program = service_program(apply_fn, optimizer, fed, svc)
+    length = svc.reselect_every
+    seg_fn = jax.jit(make_segment_fn(program, length, eval_fn=eval_fn,
+                                     metrics_tap=metrics_tap))
+    history: List[Dict] = []
+    for period in range(start_period, periods):
+        state = apply_events(state, events, period)
+        t0 = time.time()
+        state, metrics = seg_fn(state, data)
+        jax.block_until_ready(metrics)
+        dt = time.time() - t0
+        r0 = period * length
+        publish(r0, state)
+        history.extend(extract_history(metrics, r0, length))
+        if ckpt_dir is not None and \
+                (period + 1 - start_period) % svc.checkpoint_every == 0:
+            checkpoint_service(ckpt_dir, period, state, chain,
+                               keep_last_k=svc.keep_last_k)
+        if log is not None:
+            last = history[-1]
+            parts = [f"{k} {last[k]:.4f}" for k in ("acc", "mean_loss")
+                     if k in last]
+            log(f"period {period:3d} (rounds {r0}..{r0 + length - 1}) "
+                + " ".join(parts)
+                + f" active {last['active_frac']:.2f}"
+                + f" ({dt:.1f}s)")
+    return state, chain, history

@@ -1,0 +1,193 @@
+"""Membership / churn layer: ragged cohorts over a static padded
+client axis (DESIGN.md §13).
+
+XLA wants static shapes; open federations don't. The resolution is the
+same one the N=M-1 clamp and the ragged-shape property tests already
+anticipate: the client axis is padded to a fixed M and membership is a
+mask. A departed client keeps its slot (params, codes, rankings stay
+in the arrays) but
+
+  * is excluded from every peer's Eq. 6-8 top-N (its Eq. 8 weight is
+    forced to -inf through the score column — `neighbor.select_partners
+    (active=...)`),
+  * stops reporting rankings (reporter_mask &= active, §3.6),
+  * stops training (update_phase `participate` mask freezes params and
+    optimizer state), and
+  * stops announcing (codes / rankings / commitments frozen; its
+    `code_age` grows one per period).
+
+A joining client simply flips its mask bit back on: it re-enters with
+whatever codes it last announced (possibly several periods stale) and
+`code_age > 0`, which the service's Eq. 8 weighting discounts by
+`exp(-staleness_lambda * age)` until its next announcement refreshes
+the code (age resets to 0). Churn is therefore *masking*, never a
+reshape — every compiled segment keeps one shape, and join/leave are
+pure host-side state edits between periods.
+
+`gossip_count` is the per-client heterogeneous gossip budget G_i: in a
+reselection period of length L, client i trains in the global round
+plus the first G_i - 1 gossip epochs and then idles (params frozen,
+still answering peers' exchanges — it is online, just lazier).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, List, NamedTuple, Optional, Sequence
+
+import jax.numpy as jnp
+
+from repro.core.protocol import FedState
+
+EVENT_KINDS = ("join", "leave")
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    """Service-layer knobs, on top of FedConfig (which keeps owning the
+    protocol hyperparameters)."""
+    reselect_every: int = 4        # period length L (rounds per segment)
+    staleness_lambda: float = 0.5  # Eq. 8 discount exp(-lambda * age)
+    checkpoint_every: int = 1      # periods between durable checkpoints
+    keep_last_k: int = 3           # checkpoint retention
+
+    def __post_init__(self):
+        if self.reselect_every < 1:
+            raise ValueError(
+                f"reselect_every must be >= 1, got {self.reselect_every}")
+        if self.staleness_lambda < 0:
+            raise ValueError(
+                f"staleness_lambda must be >= 0, got "
+                f"{self.staleness_lambda}")
+        if self.checkpoint_every < 1:
+            raise ValueError(
+                f"checkpoint_every must be >= 1, got "
+                f"{self.checkpoint_every}")
+        if self.keep_last_k < 1:
+            raise ValueError(
+                f"keep_last_k must be >= 1, got {self.keep_last_k}")
+
+
+class ServiceState(NamedTuple):
+    """FedState plus the membership layer — one pytree, so the whole
+    thing checkpoints through `checkpoint.store` and threads through
+    compiled segments unchanged."""
+    fed: FedState
+    active: jnp.ndarray        # (M,) bool — current members
+    code_age: jnp.ndarray      # (M,) int32 — periods since last announce
+    gossip_count: jnp.ndarray  # (M,) int32 — per-client G_i in [1, L]
+    period_start: jnp.ndarray  # () int32 — round of this period's global
+
+
+class ChurnEvent(NamedTuple):
+    """A membership change applied at the START of `period`."""
+    period: int
+    kind: str                  # "join" | "leave"
+    client: int
+
+
+def init_service_state(fed_state: FedState, svc: ServiceConfig, *,
+                       active=None, gossip_counts=None) -> ServiceState:
+    """Wrap a freshly-initialized FedState for the service driver.
+
+    active: optional (M,) bool initial membership (default: everyone).
+    gossip_counts: optional per-client G_i sequence; clamped to
+    [1, reselect_every] (default: the full period for everyone)."""
+    m = fed_state.codes.shape[0]
+    if active is None:
+        active = jnp.ones((m,), bool)
+    else:
+        active = jnp.asarray(active, bool)
+        if active.shape != (m,):
+            raise ValueError(f"active mask shape {active.shape} != ({m},)")
+    if gossip_counts is None:
+        counts = jnp.full((m,), svc.reselect_every, jnp.int32)
+    else:
+        counts = jnp.clip(jnp.asarray(gossip_counts, jnp.int32),
+                          1, svc.reselect_every)
+        if counts.shape != (m,):
+            raise ValueError(
+                f"gossip_counts shape {counts.shape} != ({m},)")
+    return ServiceState(fed_state, active, jnp.zeros((m,), jnp.int32),
+                        counts, jnp.zeros((), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# churn events
+# ---------------------------------------------------------------------------
+def join(state: ServiceState, client: int) -> ServiceState:
+    """Flip a slot's membership on. Idempotent. The client re-enters
+    with its last-announced (stale) codes and its accumulated
+    code_age — selection discounts it until it re-announces."""
+    return state._replace(active=state.active.at[client].set(True))
+
+
+def leave(state: ServiceState, client: int) -> ServiceState:
+    """Flip a slot's membership off. Idempotent. Params stay in the
+    padded slot (the client may rejoin; its personalized model also
+    remains servable)."""
+    return state._replace(active=state.active.at[client].set(False))
+
+
+def validate_events(events: Iterable[ChurnEvent],
+                    num_clients: int) -> List[ChurnEvent]:
+    out = []
+    for ev in events:
+        ev = ChurnEvent(*ev)
+        if ev.kind not in EVENT_KINDS:
+            raise ValueError(f"unknown churn event kind: {ev.kind!r} "
+                             f"(expected one of {EVENT_KINDS})")
+        if not 0 <= ev.client < num_clients:
+            raise ValueError(
+                f"churn event client {ev.client} outside the padded "
+                f"client axis [0, {num_clients})")
+        if ev.period < 0:
+            raise ValueError(f"churn event period must be >= 0, got "
+                             f"{ev.period}")
+        out.append(ev)
+    return out
+
+
+def apply_events(state: ServiceState, events: Iterable[ChurnEvent],
+                 period: int) -> ServiceState:
+    """Apply every event scheduled for `period` (in list order — the
+    deterministic replay order that kill/resume relies on)."""
+    for ev in events:
+        if ev.period != period:
+            continue
+        state = join(state, ev.client) if ev.kind == "join" \
+            else leave(state, ev.client)
+    return state
+
+
+def parse_events(spec: str) -> List[ChurnEvent]:
+    """Parse the CLI churn spec: "1:leave:4,2:join:5" ->
+    [ChurnEvent(1, "leave", 4), ChurnEvent(2, "join", 5)]."""
+    events = []
+    for item in filter(None, (s.strip() for s in spec.split(","))):
+        parts = item.split(":")
+        if len(parts) != 3:
+            raise ValueError(
+                f"bad churn event {item!r} (want period:kind:client)")
+        # analysis: host-ok — int() on CLI strings, not device values
+        events.append(ChurnEvent(int(parts[0]), parts[1], int(parts[2])))
+    return events
+
+
+# ---------------------------------------------------------------------------
+# masks consumed by the service round program
+# ---------------------------------------------------------------------------
+def staleness_discount(code_age, staleness_lambda: float):
+    """Eq. 8 score multiplier exp(-lambda * age): a client whose
+    published code is `age` periods old carries proportionally less
+    selection weight (its code was projected with an old per-round
+    seed, so its Hamming distances to fresh codes carry little
+    similarity signal — the ranking score is the evidence that
+    remains, and it decays)."""
+    return jnp.exp(-staleness_lambda * code_age.astype(jnp.float32))
+
+
+def participation_mask(state: ServiceState, epoch) -> jnp.ndarray:
+    """(M,) bool — who trains in gossip epoch `epoch` (0-based within
+    the period): active members whose gossip budget G_i covers the
+    global round (1) plus `epoch + 1` gossip epochs."""
+    return state.active & (epoch < state.gossip_count - 1)

@@ -87,13 +87,20 @@ def make_train_step(cfg: ModelConfig, optimizer: Optimizer, *,
 
 
 def make_prefill_step(cfg: ModelConfig, *, window_override: int = 0,
-                      unroll: bool = False, scan_unroll: int = 1):
-    """(params, batch) -> (last logits (B,V), cache)."""
+                      cache_len: int = 0, unroll: bool = False,
+                      scan_unroll: int = 1):
+    """(params, batch) -> (last logits (B,V), cache).
+
+    `cache_len` sizes the returned KV cache beyond the prompt (0 =
+    prompt length only) — a server that decodes `max_new` tokens after
+    the prompt passes prompt_len + max_new here and reuses the ONE
+    compiled prefill for cache building (launch/serve.py)."""
 
     def prefill_step(params, batch):
         extra = {k: batch[k] for k in ("audio", "vision") if k in batch}
         return prefill(cfg, params, batch["tokens"], extra or None,
-                       window_override=window_override, unroll=unroll,
+                       window_override=window_override,
+                       cache_len=cache_len, unroll=unroll,
                        scan_unroll=scan_unroll)
 
     return prefill_step

@@ -92,6 +92,48 @@ def test_checkpoint_shape_mismatch_raises(tmp_path):
         ckpt.restore(d, 1, {"w": jnp.ones((4,))})
 
 
+def test_checkpoint_keep_last_k_prunes(tmp_path):
+    d = str(tmp_path / "ck")
+    tree = {"w": jnp.ones((2,))}
+    for step in range(5):
+        ckpt.save(d, step, tree, keep_last_k=3)
+    import os
+    files = sorted(f for f in os.listdir(d) if f.endswith(".npz"))
+    assert files == ["step_00000002.npz", "step_00000003.npz",
+                     "step_00000004.npz"]
+    assert ckpt.latest_step(d) == 4
+    # pruning never touches non-snapshot files in the same directory
+    # (the service keeps its chain.json next to the snapshots)
+    (tmp_path / "ck" / "chain.json").write_text("{}")
+    ckpt.save(d, 5, tree, keep_last_k=1)
+    left = sorted(os.listdir(d))
+    assert left == ["chain.json", "step_00000005.npz"]
+    with pytest.raises(ValueError):
+        ckpt.save(d, 6, tree, keep_last_k=0)
+
+
+def test_checkpoint_mixed_pytree_bf16_roundtrip(tmp_path):
+    """Tuple/list/dict mix + the bf16 -> f32 (npz) -> bf16 cast path:
+    bf16 survives EXACTLY (f32 holds every bf16 value), and every
+    other dtype round-trips bitwise."""
+    tree = {
+        "stack": [({"w": jnp.arange(6, dtype=jnp.bfloat16).reshape(2, 3),
+                    "b": jnp.float32(0.1)},
+                   {"w": jnp.full((3,), 1.0 / 3.0, jnp.bfloat16)}),
+                  {"ints": jnp.arange(4, dtype=jnp.int32)}],
+        "mask": jnp.asarray([True, False, True]),
+        "seed": jnp.asarray([7, 9], jnp.uint32),
+    }
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 0, tree)
+    restored = ckpt.restore(d, 0, jax.tree.map(jnp.zeros_like, tree))
+    assert (jax.tree.structure(tree) == jax.tree.structure(restored))
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        assert a.dtype == b.dtype
+        assert np.array_equal(np.asarray(a, np.float64),
+                              np.asarray(b, np.float64))
+
+
 # ---------------------------------------------------------------------------
 # federated data pipeline (paper §4.3 statistics)
 # ---------------------------------------------------------------------------
