@@ -16,16 +16,31 @@
 # + a 1024-client dryrun on the tiled backend
 # (the 10^4-client scaling path lowered under sharding, in a fresh
 # process because jax locks the device count at first init).
-# The static-analysis gate (DESIGN.md §12) runs FIRST: kernel-contract
-# verification + trace-safety lint are cheap (no kernel executes) and
-# catch the §10/§4 bug classes before the test tiers spend minutes.
+# The static-analysis gate (DESIGN.md §12/§14) runs FIRST: kernel
+# contracts + trace lint + the privacy-taint verifier are cheap (no
+# kernel executes) and catch the §10/§4 bug classes — and any
+# disclosure-boundary leak — before the test tiers spend minutes. The
+# gate's wall-time is recorded in benchmarks/ANALYSIS_report.json. The
+# seeded-leak fixtures are then each asserted to FAIL the strict gate:
+# a verifier that stops flagging planted leaks is itself broken.
 # Usage: scripts/ci.sh [extra pytest args]
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "== static analysis: kernel contracts + trace lint =="
+echo "== static analysis: contracts + lint + privacy taint (strict) =="
 python -m repro.analysis --strict --json benchmarks/ANALYSIS_report.json
+
+echo "== seeded-leak fixtures must fail the strict gate =="
+for leak in tests/analysis_fixtures/leak_announce_field.py \
+            tests/analysis_fixtures/leak_metric_tap.py \
+            tests/analysis_fixtures/leak_served_private.py; do
+    if python -m repro.analysis --strict "$leak" >/dev/null 2>&1; then
+        echo "FATAL: $leak passed the strict gate (planted leak missed)"
+        exit 1
+    fi
+    echo "ok: $leak rejected"
+done
 
 echo "== tier-1: pytest =="
 python -m pytest -x -q "$@"

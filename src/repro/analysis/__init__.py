@@ -1,23 +1,38 @@
-"""Static-analysis subsystem: kernel contracts + trace-safety lint.
+"""Static-analysis subsystem: kernel contracts + trace-safety lint +
+privacy-taint verification.
 
-Two layers (DESIGN.md §12), one CLI (`python -m repro.analysis`):
+Three layers (DESIGN.md §12, §14), one CLI (`python -m repro.analysis`):
 
   * `registry` / `kernel_contracts` — a contract registry entry per
     Pallas kernel (wrapper fn, jnp oracle twin in `kernels/ref.py`,
     VMEM estimator in `core/backends.py`, exactness class) and an
     abstract interpreter over each pallas_call site's grid +
     BlockSpecs: output-tile coverage, undeclared output revisits
-    (write races), block/arity consistency, and estimator
-    truthfulness at representative shapes.
-  * `trace_lint` — AST lint over `core/`, `kernels/`, `launch/` for
-    host-side casts on traced values, Python `if` on traced booleans,
-    constant PRNG keys in traced code, and host-sync call patterns
-    (exempted case-by-case via `# analysis: host-ok`).
+    (write races), block/arity consistency, estimator truthfulness at
+    representative shapes, and the src/repro-wide completeness walk
+    (no pallas_call site may dodge registration).
+  * `trace_lint` — AST lint over `core/`, `kernels/`, `launch/`,
+    `service/`, `train/`, `checkpoint/` for host-side casts on traced
+    values, Python `if` on traced booleans, constant PRNG keys in
+    traced code, and host-sync call patterns (exempted case-by-case
+    via `# analysis: host-ok`; the exemption inventory is pinned in
+    `exemptions.py`).
+  * `privacy` / `taint` — the trust-free disclosure boundary as a
+    machine-checked dataflow property: `@declassifier`-registered
+    functions (LSH codes, rankings, commitments, reference-set logits,
+    scalar telemetry) are the ONLY paths by which values derived from
+    private sources (client params, optimizer state, local batches)
+    may reach a declared `sink(...)` — proven over the jaxprs of every
+    protocol phase, round program, service segment, and the serving
+    forward.
 
-This package deliberately keeps `registry` import-light (stdlib only)
-so the kernel modules can attach their contract entries at import time
-without a cycle; everything heavier (jax, the checkers) lives behind
-function-level imports in the sibling modules.
+This package deliberately keeps `registry` and `privacy` import-light
+(stdlib only) so protocol and kernel modules can attach their
+registrations at import time without a cycle; everything heavier (jax,
+the checkers) lives behind function-level imports in the sibling
+modules.
 """
+from repro.analysis.privacy import (DECLASSIFIERS, SINKS,  # noqa: F401
+                                    declassifier, sink)
 from repro.analysis.registry import REGISTRY, kernel_contract  # noqa: F401
 from repro.analysis.report import Finding  # noqa: F401

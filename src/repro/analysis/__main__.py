@@ -1,17 +1,32 @@
 """CLI: `python -m repro.analysis [--strict] [--json PATH] [paths...]`.
 
-With no paths: verify every registered kernel contract (importing the
-kernel modules populates the registry) and lint `src/repro/{core,
-kernels,launch}`. With paths: lint those files/directories instead,
-and additionally contract-check any `kernel_contract(` registrations
-the given .py files make at import time (this is how the seeded-bad
-fixtures under tests/analysis_fixtures/ are driven, in isolation from
-the HEAD registry).
+With no paths, the full HEAD gate runs (DESIGN.md §12/§14):
+
+  1. kernel contracts — verify every registered entry (importing the
+     kernel modules populates the registry) AND the completeness walk:
+     every `pallas_call` site anywhere under src/repro must be covered
+     by a contract declaration (`unregistered-kernel` otherwise);
+  2. trace-safety lint over src/repro/{core,kernels,launch,service,
+     train,checkpoint}, plus the `# analysis: host-ok` exemption
+     inventory — the count is pinned in `analysis/exemptions.py` and
+     drift is a warning-severity finding (fails --strict only);
+  3. privacy-taint verification — `analysis.taint.head_targets()`
+     traces every protocol phase, round program, tapped segment, the
+     service driver, and the serving forward, and proves no private
+     source reaches a disclosure sink undeclassified.
+
+With paths: lint those files/directories instead, and drive fixture
+modules in isolation — any `kernel_contract(` registrations are
+contract-checked, any `taint_target(` registrations are taint-checked,
+and per-file pallas_call completeness is enforced (this is how the
+seeded-bad fixtures under tests/analysis_fixtures/ run without
+touching the HEAD registries).
 
 Exit status: 0 when clean; 1 when any error-severity finding exists
 (`--strict` promotes everything, warnings included). `--json PATH`
-additionally writes the diffable rule->count->location payload
-(benchmarks/ANALYSIS_report.json in CI).
+additionally writes the schema-versioned, deterministic payload
+(benchmarks/ANALYSIS_report.json in CI) including the analysis
+wall-time.
 """
 from __future__ import annotations
 
@@ -19,12 +34,14 @@ import argparse
 import importlib.util
 import os
 import sys
+import time
 from typing import List, Optional
 
 from repro.analysis.registry import capture_registrations
 from repro.analysis.report import Finding, render_json, render_text
 
-DEFAULT_LINT_DIRS = ("core", "kernels", "launch", "service")
+DEFAULT_LINT_DIRS = ("core", "kernels", "launch", "service", "train",
+                     "checkpoint")
 
 
 def _default_lint_paths() -> List[str]:
@@ -33,21 +50,29 @@ def _default_lint_paths() -> List[str]:
     return [os.path.join(root, d) for d in DEFAULT_LINT_DIRS]
 
 
-def _has_registrations(path: str) -> bool:
+def _registration_kinds(path: str) -> tuple:
+    """(has kernel_contract, has taint_target) textual pre-check, so
+    only fixture files that actually register anything get imported."""
     try:
         with open(path, "r", encoding="utf-8") as fh:
-            return "kernel_contract(" in fh.read()
+            src = fh.read()
     except OSError:
-        return False
+        return False, False
+    return "kernel_contract(" in src, "taint_target(" in src
 
 
-def _check_module_file(path: str) -> List[Finding]:
-    """Import one .py file in isolation and contract-check whatever it
-    registers (fixture driver)."""
-    from repro.analysis.kernel_contracts import check_entries
+def _check_fixture_file(path: str) -> List[Finding]:
+    """Import one .py file in isolation and check whatever it registers
+    (fixture driver): kernel contracts, taint targets, and per-file
+    pallas_call completeness."""
+    from repro.analysis.kernel_contracts import (check_entries,
+                                                 completeness_file_findings)
+    from repro.analysis.privacy import capture_declassifiers
+    from repro.analysis.taint import capture_targets, check_targets
     name = "_analysis_target_" + \
         os.path.splitext(os.path.basename(path))[0]
-    with capture_registrations() as entries:
+    with capture_registrations() as entries, \
+            capture_targets() as targets, capture_declassifiers():
         spec = importlib.util.spec_from_file_location(name, path)
         mod = importlib.util.module_from_spec(spec)
         try:
@@ -55,27 +80,35 @@ def _check_module_file(path: str) -> List[Finding]:
         except Exception as e:  # a fixture that cannot import is a finding
             return [Finding("block-mismatch", path, 1,
                             f"import failed: {e}")]
-    return check_entries(entries)
+    findings = check_entries(entries)
+    findings += completeness_file_findings(path, entries)
+    findings += check_targets(targets)
+    return findings
 
 
 def run(argv: Optional[List[str]] = None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
-        description="kernel-contract checker + trace-safety lint")
+        description="kernel-contract checker + trace-safety lint + "
+                    "privacy-taint verifier")
     ap.add_argument("paths", nargs="*",
-                    help="files/dirs to analyze (default: the HEAD "
-                         "kernel registry + src/repro/{core,kernels,"
-                         "launch})")
+                    help="files/dirs to analyze (default: the full "
+                         "HEAD gate — kernel registry, lint dirs, "
+                         "taint targets)")
     ap.add_argument("--strict", action="store_true",
-                    help="exit non-zero on ANY finding (CI gate)")
+                    help="exit non-zero on ANY finding, warnings "
+                         "included (CI gate)")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="also write the JSON report to PATH")
     args = ap.parse_args(argv)
 
-    from repro.analysis.trace_lint import lint_paths
+    from repro.analysis.trace_lint import collect_host_ok, lint_paths
 
+    t0 = time.monotonic()
     findings: List[Finding] = []
     checked: List[str] = []
+    taint_names: List[str] = []
+    host_ok = None
     if args.paths:
         lint_targets = list(args.paths)
         for p in args.paths:
@@ -89,26 +122,58 @@ def run(argv: Optional[List[str]] = None) -> int:
             elif p.endswith(".py"):
                 files.append(p)
             for f in files:
-                if _has_registrations(f):
+                has_kc, has_tt = _registration_kinds(f)
+                if has_kc or has_tt:
                     checked.append(f)
-                    findings.extend(_check_module_file(f))
+                    findings.extend(_check_fixture_file(f))
+                else:
+                    # registration-free file: pallas_call sites here
+                    # are unregistered by definition
+                    from repro.analysis.kernel_contracts import \
+                        completeness_file_findings
+                    findings.extend(completeness_file_findings(f, ()))
     else:
         from repro.analysis.kernel_contracts import (check_entries,
+                                                     completeness_findings,
                                                      head_entries)
+        from repro.analysis.taint import check_targets, head_targets
         entries = head_entries()
         checked = [e.name for e in entries]
         findings.extend(check_entries(entries))
+        findings.extend(completeness_findings(entries))
+        targets = head_targets()
+        taint_names = [t.name for t in targets]
+        findings.extend(check_targets(targets))
         lint_targets = _default_lint_paths()
 
     findings.extend(lint_paths(lint_targets))
-    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+
+    if not args.paths:
+        # exemption inventory (default gate only: fixture path runs
+        # must not trip the HEAD pin)
+        from repro.analysis.exemptions import EXPECTED_HOST_OK
+        host_ok = [(os.path.relpath(p), ln, why)
+                   for p, ln, why in collect_host_ok(lint_targets)]
+        if len(host_ok) != EXPECTED_HOST_OK:
+            findings.append(Finding(
+                "host-ok-drift", "src/repro/analysis/exemptions.py", 1,
+                f"{len(host_ok)} `# analysis: host-ok` exemptions under "
+                f"the default lint dirs, pin says {EXPECTED_HOST_OK} — "
+                f"update the pin alongside the new/removed exemption",
+                severity="warning"))
+
+    findings.sort(key=lambda f: (f.path, f.line, f.rule, f.message))
+    wall = time.monotonic() - t0
 
     print(render_text(findings))
     if args.json:
         payload = render_json(findings, strict=args.strict,
                               checked_entries=checked,
                               linted_paths=[os.path.relpath(p)
-                                            for p in lint_targets])
+                                            for p in lint_targets],
+                              taint_targets=taint_names,
+                              host_ok=host_ok,
+                              wall_time_s=wall)
         os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
         with open(args.json, "w", encoding="utf-8") as fh:
             fh.write(payload + "\n")

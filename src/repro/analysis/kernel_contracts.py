@@ -29,11 +29,13 @@ of captured sites matches the declaration.
 """
 from __future__ import annotations
 
+import ast
 import functools
 import inspect
 import itertools
 import math
-from typing import List, Optional
+import os
+from typing import Dict, List, Optional
 
 from repro.analysis.registry import (REGISTRY, CapturedSite, KernelEntry,
                                      capture_sites, unjitted)
@@ -288,4 +290,95 @@ def check_entries(entries=None) -> List[Finding]:
     out: List[Finding] = []
     for entry in entries:
         out.extend(check_entry(entry))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# registry completeness: NO pallas_call site anywhere in src/repro may
+# dodge contract registration (not just the hardcoded kernel-file list)
+# ---------------------------------------------------------------------------
+def pallas_call_lines(path: str) -> List[int]:
+    """Line numbers of `pallas_call(...)` CALL expressions in `path`.
+
+    AST Call nodes only — assignments (`real = pl.pallas_call`, the
+    registry's capture monkey-patch), attribute mentions, and docstring
+    text do not count, which is what makes the walk safe to run over
+    every module instead of a curated list."""
+    try:
+        with open(path, "r", encoding="utf-8") as fh:
+            tree = ast.parse(fh.read(), filename=path)
+    except (OSError, SyntaxError):
+        return []
+    lines = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            f = _dotted_name(node.func)
+            if f == "pallas_call" or (f or "").endswith(".pallas_call"):
+                lines.append(node.lineno)
+    return sorted(lines)
+
+
+def _dotted_name(node) -> Optional[str]:
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _declared_sites_by_file(entries) -> Dict[str, int]:
+    declared: Dict[str, int] = {}
+    for e in entries:
+        path = os.path.realpath(_entry_loc(e)[0])
+        declared[path] = declared.get(path, 0) + e.sites
+    return declared
+
+
+def completeness_file_findings(path: str, entries) -> List[Finding]:
+    """Compare one file's textual pallas_call sites against the
+    contracts registered for functions defined in it (path mode /
+    fixture driver)."""
+    lines = pallas_call_lines(path)
+    declared = _declared_sites_by_file(entries).get(
+        os.path.realpath(path), 0)
+    if len(lines) == declared:
+        return []
+    return [Finding(
+        "unregistered-kernel", path, lines[0] if lines else 1,
+        f"{len(lines)} pallas_call site(s) at lines {lines} but the "
+        f"registered kernel contracts declare {declared} — every "
+        f"launch needs a kernel_contract entry")]
+
+
+def completeness_findings(entries=None,
+                          src_root: Optional[str] = None) -> List[Finding]:
+    """Walk ALL of src/repro (not just KERNEL_MODULES) and require the
+    per-file pallas_call site counts to match the registered contract
+    declarations exactly — a kernel added outside kernels/ cannot dodge
+    registration (ISSUE 9 satellite; one seeded fixture pins it)."""
+    entries = head_entries() if entries is None else entries
+    if src_root is None:
+        # .../src/repro, from .../src/repro/analysis/kernel_contracts.py
+        src_root = os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__)))
+    declared = _declared_sites_by_file(entries)
+    out: List[Finding] = []
+    for root, dirs, files in os.walk(src_root):
+        dirs[:] = [d for d in dirs if d != "__pycache__"]
+        for f in sorted(files):
+            if not f.endswith(".py"):
+                continue
+            path = os.path.join(root, f)
+            lines = pallas_call_lines(path)
+            want = declared.get(os.path.realpath(path), 0)
+            if len(lines) != want:
+                out.append(Finding(
+                    "unregistered-kernel", path,
+                    lines[0] if lines else 1,
+                    f"{len(lines)} pallas_call site(s) at lines "
+                    f"{lines} but the registered kernel contracts "
+                    f"declare {want} for this module"))
     return out

@@ -1,0 +1,155 @@
+"""Declassifier + sink registries for the privacy-taint verifier
+(DESIGN.md §14).
+
+The paper's trust-free claim is a *dataflow* property: the only values
+that ever leave a client are LSH codes (Eq. 5-6), rank reveals and
+scores (Eq. 7), commitments (Eq. 9-10), and logits on the exchanged
+reference set — never raw parameters, optimizer state, or private
+batches. `repro.analysis.taint` proves that property over the actual
+jaxprs; this module is the annotation surface the protocol code uses
+to declare it:
+
+  * `@declassifier(...)` marks a function whose OUTPUT is deemed
+    releasable, with the paper equation it implements and a recorded
+    justification. At runtime the wrapper is a passthrough (zero graph
+    overhead); while the analyzer traces (`tracing()` active) it binds
+    a `taint_declassify` marker primitive on each output leaf, which
+    the propagation engine clears.
+  * `sink(name, value)` marks a disclosure point — a value that is
+    about to cross the trust boundary (announcement fields the host
+    ledger publishes, metric taps, serving responses). Passthrough at
+    runtime; under `tracing()` it binds a `taint_sink` marker, and the
+    engine reports a `taint-sink` finding whenever a tainted value
+    reaches one.
+
+The registries mirror `registry.kernel_contract`: populated at import
+time of the protocol modules, inspected by the checker, restorable in
+isolation for fixtures (`capture_declassifiers`). Like `registry`,
+this module is import-light on purpose (stdlib only at module level):
+`core.chain` / `core.lsh` / `core.rounds` import it at import time, so
+it must not pull in jax or any `repro` sibling. The marker primitives
+themselves live in `repro.analysis.taint` and are imported lazily,
+only while the analyzer is tracing.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import functools
+from typing import Callable, Dict, List
+
+# sink name -> what crosses the trust boundary there (the static table
+# `sink()` validates against; DESIGN.md §14 documents each row)
+SINKS: Dict[str, str] = {
+    "chain-announcement": "Announcement fields (codes, rankings, "
+                          "commitments) consumed by Blockchain."
+                          "publish_round and the §3.6 reveals",
+    "ledger-publish": "the merged per-period state fields the service "
+                      "publisher reads onto the host ledger and the "
+                      "checkpointed chain JSON",
+    "metrics-tap": "per-round scalar metrics streamed to the host "
+                   "through the ordered io_callback tap",
+    "serving-response": "logits returned to a client by the "
+                        "PersonalizedServer forward",
+}
+
+# declassifier name -> entry; populated at protocol-module import time
+DECLASSIFIERS: Dict[str, "DeclassifierEntry"] = {}
+
+# analyzer-tracing flag: list-wrapped so `tracing()` mutates in place
+_ACTIVE = [False]
+
+
+@dataclasses.dataclass(frozen=True)
+class DeclassifierEntry:
+    name: str
+    module: str
+    qualname: str
+    paper_eq: str        # the equation/section whose disclosure this is
+    justification: str   # why releasing this value is trust-free
+
+
+def declassifier(*, name: str, paper_eq: str, justification: str):
+    """Register `fn` as a declassifier; its output is releasable.
+
+    The wrapper returns `fn`'s output unchanged at runtime. While the
+    taint analyzer traces, every output leaf is tagged with the
+    `taint_declassify` marker so the dataflow engine clears its taint
+    (recording which declassifier cleared it)."""
+    if not justification.strip():
+        raise ValueError(f"declassifier({name!r}) needs a justification")
+
+    def deco(fn: Callable) -> Callable:
+        if name in DECLASSIFIERS and \
+                DECLASSIFIERS[name].qualname != fn.__qualname__:
+            raise ValueError(f"declassifier name {name!r} already "
+                             f"registered by "
+                             f"{DECLASSIFIERS[name].qualname}")
+        DECLASSIFIERS[name] = DeclassifierEntry(
+            name=name, module=fn.__module__, qualname=fn.__qualname__,
+            paper_eq=paper_eq, justification=justification)
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            out = fn(*args, **kwargs)
+            if _ACTIVE[0]:
+                from repro.analysis.taint import declassify_value
+                return declassify_value(out, name)
+            return out
+
+        return wrapper
+
+    return deco
+
+
+def sink(name: str, value):
+    """Mark `value` as reaching the disclosure sink `name`.
+
+    Always validates the sink name against the static SINKS table (a
+    typo'd sink would otherwise silently skip verification); binds the
+    `taint_sink` marker only while the analyzer traces."""
+    if name not in SINKS:
+        raise ValueError(f"unknown sink: {name!r} "
+                         f"(expected one of {tuple(sorted(SINKS))})")
+    if _ACTIVE[0]:
+        from repro.analysis.taint import sink_value
+        return sink_value(value, name)
+    return value
+
+
+@contextlib.contextmanager
+def tracing():
+    """Analyzer-tracing scope: declassifier/sink markers bind inside.
+
+    JAX caches traces by (function identity, avals) — invisible to the
+    `_ACTIVE` flag — so a declassifier traced before the scope would
+    keep serving its marker-FREE jaxpr inside it (and marker-laden
+    jaxprs would leak out to runtime after). Both directions are fixed
+    by dropping the caches at each outermost transition."""
+    prev = _ACTIVE[0]
+    _ACTIVE[0] = True
+    try:
+        if not prev:
+            import jax
+            jax.clear_caches()
+        yield
+    finally:
+        _ACTIVE[0] = prev
+        if not prev:
+            import jax
+            jax.clear_caches()
+
+
+class capture_declassifiers:
+    """Context manager: record declassifiers registered while active
+    (fixture isolation, mirroring `registry.capture_registrations`)."""
+
+    def __enter__(self) -> List[DeclassifierEntry]:
+        self._before = set(DECLASSIFIERS)
+        self._new: List[DeclassifierEntry] = []
+        return self._new
+
+    def __exit__(self, *exc):
+        for k in set(DECLASSIFIERS) - self._before:
+            self._new.append(DECLASSIFIERS.pop(k))
+        return False

@@ -5,7 +5,11 @@ import dataclasses
 import json
 from typing import Dict, List, Optional
 
-# rule id -> one-line description (kept in sync with DESIGN.md §12)
+# bump when the JSON payload's shape changes, so CI diffs of
+# benchmarks/ANALYSIS_report.json across runs are meaningful
+SCHEMA_VERSION = 2
+
+# rule id -> one-line description (kept in sync with DESIGN.md §12/§14)
 RULES = {
     "tile-gap": "output-tile coverage gap: some output block is never "
                 "written by any grid point",
@@ -28,6 +32,22 @@ RULES = {
                     "(round-independent randomness)",
     "host-sync": "host-side numpy/scalar extraction of device values "
                  "(needs an `# analysis: host-ok` justification)",
+    "unregistered-kernel": "pallas_call site(s) in a module whose "
+                           "registered kernel contracts declare a "
+                           "different site count (a kernel dodging "
+                           "contract registration)",
+    "host-ok-drift": "the `# analysis: host-ok` exemption inventory "
+                     "changed without updating analysis/exemptions.py "
+                     "(new host escapes must be deliberate)",
+    "taint-sink": "a value tainted by a private source (client params, "
+                  "optimizer state, local batches) reaches a declared "
+                  "disclosure sink with no declassifier on the path",
+    "taint-callback": "an io_callback/pure_callback operand is tainted "
+                      "by a private source — device data crossing to "
+                      "the host undeclassified",
+    "taint-trace-error": "a taint analysis target failed to trace "
+                         "(the disclosure boundary for that entry "
+                         "point is UNVERIFIED)",
 }
 
 
@@ -60,19 +80,40 @@ def render_text(findings: List[Finding]) -> str:
 
 def render_json(findings: List[Finding], *, strict: bool,
                 checked_entries: Optional[List[str]] = None,
-                linted_paths: Optional[List[str]] = None) -> str:
-    """`--json` payload: rule -> count -> locations, diffable across
-    PRs (benchmarks/ANALYSIS_report.json)."""
+                linted_paths: Optional[List[str]] = None,
+                taint_targets: Optional[List[str]] = None,
+                host_ok: Optional[List] = None,
+                wall_time_s: Optional[float] = None) -> str:
+    """`--json` payload (benchmarks/ANALYSIS_report.json).
+
+    Deterministic by construction so CI diffs are meaningful: the flat
+    `findings` list is sorted (path, line, rule, message), every other
+    list is sorted, keys are sorted, and `schema_version` stamps the
+    shape. `host_ok` is the exemption inventory [(path, line, why)];
+    `taint_targets` the verified jaxpr entry points; `wall_time_s` the
+    whole analysis pass (ci.sh records it)."""
+    ordered = sorted(findings,
+                     key=lambda f: (f.path, f.line, f.rule, f.message))
     rules: Dict[str, Dict] = {}
-    for f in sorted(findings, key=lambda f: (f.rule, f.path, f.line)):
+    for f in ordered:
         r = rules.setdefault(f.rule, {"count": 0, "locations": []})
         r["count"] += 1
         r["locations"].append(f"{f.location()} {f.message}")
-    return json.dumps({
+    payload = {
+        "schema_version": SCHEMA_VERSION,
         "clean": not findings,
         "strict": strict,
         "total": len(findings),
+        "findings": [dataclasses.asdict(f) for f in ordered],
         "rules": rules,
-        "kernel_entries": checked_entries or [],
-        "linted_paths": linted_paths or [],
-    }, indent=1)
+        "kernel_entries": sorted(checked_entries or []),
+        "linted_paths": sorted(linted_paths or []),
+        "taint_targets": sorted(taint_targets or []),
+        "host_ok": {
+            "count": len(host_ok or []),
+            "sites": sorted(f"{p}:{ln} {why}"
+                            for p, ln, why in (host_ok or []))},
+    }
+    if wall_time_s is not None:
+        payload["wall_time_s"] = round(float(wall_time_s), 3)
+    return json.dumps(payload, indent=1, sort_keys=True)

@@ -19,7 +19,7 @@ def _flatten(tree) -> dict:
     out = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
         key = _SEP.join(_seg(p) for p in path)
-        arr = np.asarray(leaf)
+        arr = np.asarray(leaf)  # analysis: host-ok — checkpointing IS the device->host pull
         if arr.dtype.name == "bfloat16":     # npz can't serialize ml_dtypes
             arr = arr.astype(np.float32)     # (restore casts back per `like`)
         out[key] = arr
@@ -48,10 +48,10 @@ def save(ckpt_dir: str, step: int, tree: Any, *,
     os.makedirs(ckpt_dir, exist_ok=True)
     path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
     tmp = path + ".tmp.npz"          # .npz suffix so np.savez doesn't append
-    np.savez(tmp, **_flatten(tree))
+    np.savez(tmp, **_flatten(tree))  # analysis: host-ok — durable snapshot write
     os.replace(tmp, path)
     if keep_last_k is not None:
-        steps = sorted(
+        steps = sorted(  # analysis: host-ok — int() parses filenames, not device values
             int(m.group(1)) for f in os.listdir(ckpt_dir)
             if (m := re.match(r"step_(\d+)\.npz$", f)))
         for old in steps[:-keep_last_k]:
@@ -62,6 +62,7 @@ def save(ckpt_dir: str, step: int, tree: Any, *,
 def latest_step(ckpt_dir: str) -> Optional[int]:
     if not os.path.isdir(ckpt_dir):
         return None
+    # analysis: host-ok — int() parses snapshot filenames, not device values
     steps = [int(m.group(1)) for f in os.listdir(ckpt_dir)
              if (m := re.match(r"step_(\d+)\.npz$", f))]
     return max(steps) if steps else None
@@ -70,7 +71,7 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
 def restore(ckpt_dir: str, step: int, like: Any) -> Any:
     """Restore into the structure of ``like`` (a template pytree)."""
     path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
-    with np.load(path) as data:
+    with np.load(path) as data:  # analysis: host-ok — snapshot file read
         flat = {k: data[k] for k in data.files}
     paths, treedef = jax.tree_util.tree_flatten_with_path(like)
     leaves = []

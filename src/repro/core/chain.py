@@ -28,6 +28,8 @@ from typing import Any, Dict, List, Optional
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.privacy import declassifier
+
 
 # ---------------------------------------------------------------------------
 # canonical serialization + commitments
@@ -50,6 +52,11 @@ _FNV_OFFSET = np.uint64(14695981039346656037)
 _FNV_PRIME = np.uint64(1099511628211)
 
 
+@declassifier(
+    name="commitment", paper_eq="Eq. 9-10 (§3.6 commit-and-reveal)",
+    justification="a one-way hash of an already-releasable ranking "
+                  "vector: binding for the reveal check, disclosing "
+                  "nothing beyond the ranking it commits to")
 def fnv1a_commit(ranking, salt=0):
     """JAX-traceable commitment over the same canonical int sequence.
 

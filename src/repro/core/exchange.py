@@ -35,9 +35,27 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.privacy import declassifier
 from repro.core import backends
 from repro.kernels import ref
 from repro.kernels.exchange import fused_exchange, fused_exchange_streamed
+
+
+@declassifier(
+    name="public-ref-logits", paper_eq="Eq. 2-3 (§3.1 logit exchange)",
+    justification="the paper's designated exchange artifact: neighbor "
+                  "outputs on the (public or mutually shared) reference "
+                  "set — the knowledge-transfer channel the protocol "
+                  "defines as releasable in place of raw parameters")
+def public_ref_logits(neighbor_logits):
+    """Mark a (M, N, R, C) neighbor-logit web as the exchanged artifact.
+
+    `core.protocol.exchange_phase` routes every logit web through this
+    identity before it enters the exchange: the taint verifier treats
+    the gathered logits as disclosed-by-design (DESIGN.md §14), so the
+    rest of the round is proven clean DOWNSTREAM of exactly this one
+    sanctioned release."""
+    return neighbor_logits
 
 
 class ExchangeResult(NamedTuple):

@@ -18,6 +18,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.privacy import declassifier
 from repro.core import backends
 from repro.kernels import ops
 
@@ -28,6 +29,12 @@ def client_lsh_code(params, seed: int, bits: int = 256,
     return ops.lsh_code(params, seed, bits=bits, use_kernel=use_kernel)
 
 
+@declassifier(
+    name="lsh-code", paper_eq="Eq. 5-6 (§3.2)",
+    justification="sign-quantized random projection: each bit keeps one "
+                  "sign of a Rademacher projection of the flattened "
+                  "params — a locality hash for distance comparison, "
+                  "not an invertible encoding of the model")
 def stacked_lsh_codes(stacked_params, seed, bits: int = 256,
                       backend: str = "auto"):
     """Codes for vmap-stacked client params (M, ...) — the per-round

@@ -28,10 +28,12 @@ from typing import Any, Callable, Dict, NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.privacy import sink
 from repro.configs.paper_models import FedConfig
 from repro.core import distill, lsh, neighbor, ranking, verify
 from repro.core.chain import fnv1a_commit
-from repro.core.exchange import ExchangeResult, all_in_one_exchange
+from repro.core.exchange import (ExchangeResult, all_in_one_exchange,
+                                 public_ref_logits)
 from repro.core.rounds import RoundProgram, program_round
 from repro.optim.optimizers import Optimizer, apply_updates
 
@@ -148,14 +150,15 @@ def exchange_phase(apply_fn: Callable, fed: FedConfig, params,
         x_shared = data["x_ref"][0]
         own_ref = jax.vmap(apply_fn, in_axes=(0, None))(
             params, x_shared)                           # (M, R, C)
-        y_web = own_ref[sel.ids]                        # (M, N, R, C) gather
+        y_web = public_ref_logits(own_ref[sel.ids])     # (M, N, R, C) gather
         y_ref = jnp.broadcast_to(data["y_ref"][0][None],
                                  (m,) + data["y_ref"].shape[1:])
     else:
         nb_params = jax.tree.map(lambda p: p[sel.ids], params)  # (M, N, ...)
-        y_web = jax.vmap(                               # over clients i
-            jax.vmap(apply_fn, in_axes=(0, None))       # over neighbors j
-        )(nb_params, data["x_ref"])                     # (M, N, R, C)
+        y_web = public_ref_logits(
+            jax.vmap(                                   # over clients i
+                jax.vmap(apply_fn, in_axes=(0, None))   # over neighbors j
+            )(nb_params, data["x_ref"]))                # (M, N, R, C)
         own_ref = jax.vmap(apply_fn)(params, data["x_ref"])     # (M, R, C)
         y_ref = data["y_ref"]
     return all_in_one_exchange(own_ref, y_web, y_ref, sel.sel_mask, fed)
@@ -212,7 +215,11 @@ def announce_phase(fed: FedConfig, params, sel: SelectResult,
                                   backend=fed.selection_backend)
     rankings = jax.vmap(ranking.make_ranking)(sel.ids, exch.l_ij,
                                               sel.sel_mask)
-    return Announcement(codes, rankings, fnv1a_commit(rankings, salt=0))
+    # the round's disclosure point: every field crossing to the chain
+    # must arrive declassified (repro.analysis.taint proves it)
+    return sink("chain-announcement",
+                Announcement(codes, rankings,
+                             fnv1a_commit(rankings, salt=0)))
 
 
 # ---------------------------------------------------------------------------

@@ -13,7 +13,14 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.privacy import declassifier
 
+
+@declassifier(
+    name="rank-reveal", paper_eq="R_i (§3.3, revealed per §3.6)",
+    justification="the revealed ranking is an ORDER over public "
+                  "neighbor ids — the underlying distillation losses "
+                  "are discarded, only their argsort is disclosed")
 def make_ranking(neighbor_ids, losses, valid_mask=None):
     """Sort neighbor ids by ascending loss. (N,) -> (N,) int32, -1 pad.
 
@@ -49,6 +56,11 @@ def dedupe_reporter_mask(rankings, reporter_mask):
     return reporter_mask & ~dup
 
 
+@declassifier(
+    name="rank-scores", paper_eq="Eq. 7 (§3.3)",
+    justification="crowd-sourced tally over already-revealed rankings: "
+                  "a count ratio of public votes, computable by every "
+                  "peer from the chain alone")
 def ranking_scores(rankings, num_clients: int, top_k: int,
                    reporter_mask=None, *, dedupe: bool = False):
     """Eq. (7). rankings: (M, N) int32 (-1 = absent).

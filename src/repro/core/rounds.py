@@ -46,6 +46,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import io_callback
 
+from repro.analysis.privacy import declassifier, sink
+
 
 class RoundProgram(NamedTuple):
     """A federation method as a (global round, gossip epoch) pair."""
@@ -113,6 +115,25 @@ def program_round(program: RoundProgram) -> Callable:
     return round_fn
 
 
+@declassifier(
+    name="round-telemetry", paper_eq="§4 (reported per-round metrics)",
+    justification="federation-level scalar aggregates only (means and "
+                  "fractions over the client axis) — the declassifier "
+                  "refuses any non-scalar leaf, so no per-client vector "
+                  "or model-derived array can ride this channel")
+def release_round_telemetry(scalars: Dict[str, Any]) -> Dict[str, Any]:
+    """The ONLY gate through which round metrics may reach the host tap.
+
+    Raises on any non-scalar leaf: the justification above is enforced
+    structurally, not by reviewer diligence."""
+    for k, v in scalars.items():
+        if getattr(v, "ndim", None) != 0:
+            raise ValueError(
+                f"round-telemetry releases scalars only; {k!r} has "
+                f"shape {getattr(v, 'shape', None)!r}")
+    return scalars
+
+
 def _stream_metrics(metrics_tap: Callable, m: Dict[str, Any]) -> None:
     """Emit one round's scalar metrics to the host from INSIDE a
     compiled segment via an ordered `io_callback` (DESIGN.md §13): a
@@ -121,6 +142,9 @@ def _stream_metrics(metrics_tap: Callable, m: Dict[str, Any]) -> None:
     non-scalar metrics (neighbor_ids, masks) stay on device."""
     scalars = {k: jnp.asarray(v) for k, v in m.items()}
     scalars = {k: v for k, v in scalars.items() if v.ndim == 0}
+    # declassify (scalar aggregates, enforced above) THEN mark the
+    # disclosure: the io_callback below carries only released values
+    scalars = sink("metrics-tap", release_round_telemetry(scalars))
 
     def tap(s):  # analysis: host-ok — io_callback target runs on host
         metrics_tap({k: v.item() for k, v in s.items()})

@@ -42,6 +42,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.privacy import sink
 from repro.checkpoint import store
 from repro.configs.paper_models import FedConfig
 from repro.core.chain import (Blockchain, load_chain, lsh_code_hex,
@@ -110,12 +111,15 @@ def service_program(apply_fn: Callable, optimizer, fed: FedConfig,
             exch, rng_upd, participate=state.active)
         ann = announce_phase(fed, params, sel, exch, st.round)
         a = state.active
-        new_fed = FedState(
-            params, opt_state,
+        # these merged fields are what service_publisher reads onto the
+        # host ledger and what checkpoints as chain.json — the service's
+        # disclosure point (repro.analysis.taint verifies it)
+        codes, rankings, commitments = sink("ledger-publish", (
             jnp.where(a[:, None], ann.codes, st.codes),
             jnp.where(a[:, None], ann.rankings, st.rankings),
-            jnp.where(a, ann.commitments, st.commitments),
-            rng, st.round + 1)
+            jnp.where(a, ann.commitments, st.commitments)))
+        new_fed = FedState(params, opt_state, codes, rankings,
+                           commitments, rng, st.round + 1)
         metrics = _service_metrics(sel, exch, train_metrics, state, a)
         new_state = ServiceState(
             new_fed, a, jnp.where(a, 0, state.code_age + 1),

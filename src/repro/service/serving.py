@@ -19,6 +19,7 @@ period t+1 trains.
 """
 from __future__ import annotations
 
+import functools
 import time
 from typing import Any, Callable, Dict, List, Sequence, Tuple
 
@@ -26,7 +27,31 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.privacy import declassifier, sink
+
 DEFAULT_BUCKETS = (1, 4, 16, 64, 256)
+
+
+@declassifier(
+    name="served-logits", paper_eq="§2.1 (personalized model outputs)",
+    justification="output of client i's OWN personalized model on the "
+                  "requester's input — serving a client its own "
+                  "predictions is the product of the federation, not a "
+                  "cross-client disclosure")
+def served_logits(logits):
+    return logits
+
+
+def _forward_fn(apply_fn: Callable, ps, ids, x):
+    """The server's one XLA program: gather the requested client rows,
+    then a single-example forward per request (vmapped) — cross-client
+    batching in one call. Module-level (not a closure) so the taint
+    verifier can trace exactly the jaxpr that serves
+    (`analysis.taint.head_targets`, target "serving-forward")."""
+    out = jax.vmap(
+        lambda row, xi: apply_fn(row, xi[None])[0]
+    )(jax.tree.map(lambda p: p[ids], ps), x)
+    return sink("serving-response", served_logits(out))
 
 
 class PersonalizedServer:
@@ -45,13 +70,8 @@ class PersonalizedServer:
         self._buckets = tuple(sorted(set(int(b) for b in batch_buckets)))
         self._params = params
         self._num_clients = jax.tree.leaves(params)[0].shape[0]
-        # one program, compiled once per bucket size: gather the
-        # requested client rows, then a single-example forward per
-        # request (vmapped) — cross-client batching in one XLA call
-        self._forward = jax.jit(
-            lambda ps, ids, x: jax.vmap(
-                lambda row, xi: apply_fn(row, xi[None])[0]
-            )(jax.tree.map(lambda p: p[ids], ps), x))
+        # one program, compiled once per bucket size (see _forward_fn)
+        self._forward = jax.jit(functools.partial(_forward_fn, apply_fn))
         self._queue: List[Tuple[int, jnp.ndarray]] = []
         self.stats: Dict[str, Any] = {
             "requests": 0, "batches": 0, "padded_slots": 0,

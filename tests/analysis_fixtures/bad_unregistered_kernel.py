@@ -1,0 +1,22 @@
+"""Seeded-bad fixture: `unregistered-kernel` — a module that launches
+`pl.pallas_call` with NO `kernel_contract` registration. The
+completeness walk counts call sites per file against the declared
+contract totals, so a kernel added outside kernels/ (or without its
+registry entry) fails the gate instead of silently skipping every
+contract check."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _double_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2.0
+
+
+@jax.jit
+def double(x):
+    # BUG: no kernel_contract entry declares this launch site
+    return pl.pallas_call(
+        _double_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=True)(x)

@@ -1,0 +1,28 @@
+"""Seeded-leak fixture: `taint-sink` — an announcement that publishes
+a RAW PARAMETER leaf to the chain. The codes/commitment fields are
+properly declassified; the third field is a slice of the client's own
+parameters, exactly the refactor-regression the trust-free verifier
+exists to catch (ISSUE 9: "raw-param announce")."""
+import jax.numpy as jnp
+
+from repro.analysis.privacy import sink
+from repro.analysis.taint import SRC_PARAMS, taint_target
+from repro.core.chain import fnv1a_commit
+from repro.core.lsh import stacked_lsh_codes
+
+
+def leaky_announce(params_vec):
+    # stacked_lsh_codes / fnv1a_commit are registered declassifiers —
+    # these two fields are fine
+    codes = stacked_lsh_codes(params_vec, seed=1, bits=32,
+                              backend="oracle")
+    commit = fnv1a_commit(params_vec.astype(jnp.int32), salt=0)
+    # BUG: the third announced field is the raw parameter row itself
+    return sink("chain-announcement", (codes, commit, params_vec[0]))
+
+
+taint_target(
+    name="leak-announce-field",
+    build=lambda: (leaky_announce,
+                   (jnp.ones((4, 8), jnp.float32),),
+                   (SRC_PARAMS,)))

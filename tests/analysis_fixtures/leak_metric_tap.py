@@ -1,0 +1,23 @@
+"""Seeded-leak fixture: `taint-callback` — a metrics tap that streams
+a parameter-derived value to the host through io_callback WITHOUT the
+`round-telemetry` declassifier. The engine flags the tainted callback
+operand even though the value is a mere scalar mean (ISSUE 9:
+"undeclassified io_callback tap")."""
+import jax.numpy as jnp
+from jax.experimental import io_callback
+
+from repro.analysis.taint import SRC_PARAMS, taint_target
+
+
+def leaky_tap(params_vec):
+    mean = jnp.mean(params_vec)
+    # BUG: device->host crossing with no declassifier on the path
+    io_callback(lambda s: None, None, mean, ordered=True)
+    return mean
+
+
+taint_target(
+    name="leak-metric-tap",
+    build=lambda: (leaky_tap,
+                   (jnp.ones((4, 8), jnp.float32),),
+                   (SRC_PARAMS,)))

@@ -1,0 +1,23 @@
+"""Seeded-leak fixture: `taint-sink` — a serving response that returns
+a value derived from a PRIVATE TRAINING BATCH (not just the requested
+model's logits on the request input). The served output mixes in the
+client's local data mean, so the response sink receives client-data
+taint (ISSUE 9: "private-batch served output")."""
+import jax.numpy as jnp
+
+from repro.analysis.privacy import sink
+from repro.analysis.taint import SRC_DATA, taint_target
+
+
+def leaky_serve(x_request, x_train):
+    # BUG: the response blends in statistics of the private batch
+    out = x_request * 2.0 + jnp.mean(x_train)
+    return sink("serving-response", out)
+
+
+taint_target(
+    name="leak-served-private",
+    build=lambda: (leaky_serve,
+                   (jnp.ones((2, 8), jnp.float32),
+                    jnp.ones((16, 8), jnp.float32)),
+                   ("", SRC_DATA)))

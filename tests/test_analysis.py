@@ -5,21 +5,26 @@ Three layers of coverage:
     trace lint finds nothing un-exempted in core/kernels/launch;
   * each seeded-bad fixture under tests/analysis_fixtures/ trips
     exactly the rule its header names (and fails the strict CLI);
-  * the registry is complete (every `pl.pallas_call(` site in
-    src/repro/kernels is declared by some entry) and the five VMEM
-    estimators in core.backends are each cross-validated at >= 3
-    representative shape points.
+  * the registry is complete (every `pallas_call(` site anywhere under
+    src/repro is declared by some entry — AST walk, not grep) and the
+    five VMEM estimators in core.backends are each cross-validated at
+    >= 3 representative shape points.
+
+Taint-verifier coverage lives in tests/test_taint.py; this file covers
+the report schema, the completeness walk, and the host-ok inventory.
 """
-import glob
 import os
-import re
 
 import pytest
 
 from repro.analysis import __main__ as analysis_main
+from repro.analysis.exemptions import EXPECTED_HOST_OK
 from repro.analysis.kernel_contracts import (check_entries, check_entry,
-                                             head_entries)
-from repro.analysis.trace_lint import lint_paths, lint_source
+                                             completeness_findings,
+                                             head_entries,
+                                             pallas_call_lines)
+from repro.analysis.trace_lint import (collect_host_ok, lint_paths,
+                                       lint_source)
 from repro.core import backends
 
 FIXTURES = os.path.join(os.path.dirname(__file__), "analysis_fixtures")
@@ -49,9 +54,17 @@ def test_cli_strict_head_clean_and_writes_json(tmp_path):
     assert analysis_main.run(["--strict", "--json", str(report)]) == 0
     import json
     payload = json.loads(report.read_text())
+    assert payload["schema_version"] == 2
     assert payload["clean"] is True
     assert payload["total"] == 0
+    assert payload["findings"] == []
     assert len(payload["kernel_entries"]) == 9
+    # the full HEAD taint surface rides in the same report
+    assert len(payload["taint_targets"]) == 15
+    assert "wpfed-global-round" in payload["taint_targets"]
+    assert payload["host_ok"]["count"] == EXPECTED_HOST_OK
+    assert len(payload["host_ok"]["sites"]) == EXPECTED_HOST_OK
+    assert payload["wall_time_s"] > 0
 
 
 # ---------------------------------------------------------------------------
@@ -70,9 +83,14 @@ LINT_FIXTURES = [
 ]
 
 
+SITE_FIXTURES = [
+    ("bad_unregistered_kernel.py", "unregistered-kernel"),
+]
+
+
 @pytest.mark.parametrize("name,rule", CONTRACT_FIXTURES)
 def test_contract_fixture_trips_rule(name, rule):
-    findings = analysis_main._check_module_file(_fixture(name))
+    findings = analysis_main._check_fixture_file(_fixture(name))
     assert rule in {f.rule for f in findings}, \
         "\n".join(str(f) for f in findings)
 
@@ -85,39 +103,70 @@ def test_lint_fixture_trips_rule(name, rule):
 
 
 @pytest.mark.parametrize("name,rule",
-                         CONTRACT_FIXTURES + LINT_FIXTURES)
+                         CONTRACT_FIXTURES + LINT_FIXTURES + SITE_FIXTURES)
 def test_cli_strict_fails_on_fixture(name, rule, capsys):
     assert analysis_main.run(["--strict", _fixture(name)]) != 0
     assert rule in capsys.readouterr().out
 
 
 def test_fixture_dir_covers_at_least_six_rules():
-    rules = {r for _, r in CONTRACT_FIXTURES + LINT_FIXTURES}
-    assert len(rules) >= 6
+    rules = {r for _, r in
+             CONTRACT_FIXTURES + LINT_FIXTURES + SITE_FIXTURES}
+    assert len(rules) >= 7
 
 
 # ---------------------------------------------------------------------------
-# registry completeness: no unregistered pallas_call sites
+# registry completeness: no unregistered pallas_call sites in src/repro
 # ---------------------------------------------------------------------------
 def test_every_pallas_call_site_is_registered():
-    import repro.kernels
-    sites_by_module = {}
-    for e in head_entries():
-        sites_by_module[e.module] = \
-            sites_by_module.get(e.module, 0) + e.sites
-    kernels_dir = os.path.dirname(repro.kernels.__file__)
-    seen_any = False
-    for path in sorted(glob.glob(os.path.join(kernels_dir, "*.py"))):
-        with open(path, "r", encoding="utf-8") as fh:
-            n_sites = len(re.findall(r"pl\.pallas_call\(", fh.read()))
-        mod = "repro.kernels." + \
-            os.path.splitext(os.path.basename(path))[0]
-        assert sites_by_module.get(mod, 0) == n_sites, (
-            f"{mod} launches {n_sites} pallas_call site(s) but the "
-            f"registry declares {sites_by_module.get(mod, 0)} — add or "
-            f"fix a @kernel_contract entry")
-        seen_any = seen_any or n_sites > 0
-    assert seen_any  # the grep actually found the kernels
+    # the src/repro-wide AST walk finds nothing undeclared on HEAD
+    findings = completeness_findings(head_entries())
+    assert findings == [], "\n".join(str(f) for f in findings)
+
+
+def test_pallas_call_lines_counts_ast_call_nodes():
+    import repro.kernels.lsh_projection as mod
+    lines = pallas_call_lines(mod.__file__)
+    assert len(lines) >= 1 and all(
+        isinstance(n, int) and n > 0 for n in lines)
+    # registry.py ASSIGNS pl.pallas_call (capture shim) but never calls
+    # it — the AST counter must not miscount that as a launch site
+    import repro.analysis.registry as reg
+    assert pallas_call_lines(reg.__file__) == []
+    # and the seeded fixture has exactly one site
+    assert len(pallas_call_lines(
+        _fixture("bad_unregistered_kernel.py"))) == 1
+
+
+def test_completeness_flags_undeclared_site():
+    findings = completeness_findings(
+        head_entries(),
+        src_root=os.path.dirname(_fixture("bad_unregistered_kernel.py")))
+    flagged = [f for f in findings if f.rule == "unregistered-kernel"]
+    assert any("bad_unregistered_kernel.py" in f.path for f in flagged), \
+        "\n".join(str(f) for f in findings)
+
+
+# ---------------------------------------------------------------------------
+# host-ok exemption inventory (satellite: every exemption is visible)
+# ---------------------------------------------------------------------------
+def test_host_ok_inventory_matches_pin():
+    sites = collect_host_ok(analysis_main._default_lint_paths())
+    assert len(sites) == EXPECTED_HOST_OK, (
+        f"{len(sites)} host-ok exemptions found, pin says "
+        f"{EXPECTED_HOST_OK} — update src/repro/analysis/exemptions.py "
+        f"alongside the new/removed exemption")
+    for path, line, why in sites:
+        assert line > 0 and why, (path, line, why)
+
+
+def test_host_ok_drift_is_a_strict_failure(monkeypatch, capsys):
+    import repro.analysis.exemptions as ex
+    monkeypatch.setattr(ex, "EXPECTED_HOST_OK", EXPECTED_HOST_OK + 1)
+    assert analysis_main.run(["--strict"]) != 0
+    assert "host-ok-drift" in capsys.readouterr().out
+    # without --strict a warning-severity drift does not gate
+    monkeypatch.undo()
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,111 @@
+"""Commit-and-reveal parity (ISSUE 9 satellite): the in-graph FNV-1a
+fast-path commitment (`core.chain.fnv1a_commit` / `core.verify
+.verify_rankings_fnv`) and the on-chain SHA-256 binding commitment
+(`core.chain.sha256_commit` / `verify_reveal`) must agree on WHICH
+reveals verify — over random announcements and tampered-reveal
+negatives — and the agreement must hold end-to-end through a
+`Blockchain` publish/reveal cycle.
+
+Property-test style with plain seeded numpy loops (hypothesis is not
+installable offline; conftest's stub would skip @given tests)."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.chain import (Blockchain, fnv1a_commit, sha256_commit,
+                              verify_reveal)
+from repro.core.verify import verify_rankings_fnv
+
+N_TRIALS = 50
+
+
+def _random_rankings(rs, m, n):
+    """Plausible announcement rankings: neighbor ids with -1 padding."""
+    r = rs.randint(-1, 4 * m, size=(m, n)).astype(np.int32)
+    return r
+
+
+def _tamper(rs, rankings):
+    """Flip one entry of one row; guaranteed to differ."""
+    t = rankings.copy()
+    i = rs.randint(t.shape[0])
+    j = rs.randint(t.shape[1])
+    t[i, j] += 1 + rs.randint(5)
+    return t, i
+
+
+def test_fnv_and_sha_agree_on_honest_and_tampered_reveals():
+    rs = np.random.RandomState(0)
+    for trial in range(N_TRIALS):
+        m = int(rs.randint(2, 9))
+        n = int(rs.randint(1, 6))
+        salt = int(rs.randint(0, 1 << 16))
+        rankings = _random_rankings(rs, m, n)
+        commits_fnv = fnv1a_commit(jnp.asarray(rankings), salt=salt)
+        commits_sha = [sha256_commit(rankings[i], salt=salt)
+                       for i in range(m)]
+
+        # honest reveals: both accept every row
+        ok_fnv = np.asarray(verify_rankings_fnv(
+            jnp.asarray(rankings), commits_fnv, salt=salt))
+        ok_sha = np.array([verify_reveal(commits_sha[i], rankings[i],
+                                         salt=salt) for i in range(m)])
+        assert ok_fnv.all() and ok_sha.all(), trial
+
+        # tampered reveal: both reject exactly the tampered row
+        tampered, row = _tamper(rs, rankings)
+        bad_fnv = np.asarray(verify_rankings_fnv(
+            jnp.asarray(tampered), commits_fnv, salt=salt))
+        bad_sha = np.array([verify_reveal(commits_sha[i], tampered[i],
+                                          salt=salt) for i in range(m)])
+        # full agreement vector, not just the tampered row
+        np.testing.assert_array_equal(bad_fnv, bad_sha)
+        assert not bad_fnv[row], trial
+
+
+def test_fnv_salt_separates_commitments():
+    rs = np.random.RandomState(1)
+    for trial in range(N_TRIALS):
+        rankings = _random_rankings(rs, int(rs.randint(2, 6)), 4)
+        c0 = fnv1a_commit(jnp.asarray(rankings), salt=7)
+        # verifying against the wrong salt must fail (both schemes)
+        ok = np.asarray(verify_rankings_fnv(jnp.asarray(rankings), c0,
+                                            salt=8))
+        assert not ok.any(), trial
+        sha7 = sha256_commit(rankings[0], salt=7)
+        assert not verify_reveal(sha7, rankings[0], salt=8)
+
+
+def test_parity_through_blockchain_end_to_end():
+    """Publish SHA commitments on chain, reveal next round, and check
+    the chain-side verdicts match the in-graph FNV verdicts — with one
+    client revealing a tampered ranking."""
+    rs = np.random.RandomState(2)
+    m, n = 5, 3
+    rankings = _random_rankings(rs, m, n)
+    commits_fnv = fnv1a_commit(jnp.asarray(rankings), salt=0)
+
+    chain = Blockchain()
+    chain.publish_round(0, {
+        i: {"lsh": "00", "commit": sha256_commit(rankings[i])}
+        for i in range(m)})
+
+    # round 1: everyone reveals; client 3 lies about its ranking
+    revealed = rankings.copy()
+    revealed[3, 0] += 2
+    chain.publish_round(1, {i: {"lsh": "00", "commit": "x"}
+                            for i in range(m)},
+                        reveals={i: revealed[i] for i in range(m)})
+    assert chain.verify_chain()
+
+    blk0 = chain.round_block(0)
+    blk1 = chain.round_block(1)
+    on_chain_reveals = np.array(
+        [blk1.payload["reveals"][str(i)] for i in range(m)], np.int32)
+    verdict_sha = np.array([
+        verify_reveal(blk0.payload["announcements"][str(i)]["commit"],
+                      on_chain_reveals[i]) for i in range(m)])
+    verdict_fnv = np.asarray(verify_rankings_fnv(
+        jnp.asarray(on_chain_reveals), commits_fnv))
+    np.testing.assert_array_equal(verdict_sha, verdict_fnv)
+    np.testing.assert_array_equal(
+        verdict_sha, np.array([True, True, True, False, True]))
