@@ -24,11 +24,14 @@ import numpy as np
 
 from repro.configs.paper_models import ClientModelConfig, FedConfig
 from repro.core import init_state
+from repro.core.faults import FaultPlan
 from repro.models import apply_client_model, init_client_model
 from repro.optim import adam
-from repro.service import (PersonalizedServer, ServiceConfig,
-                           init_service_state, resume_service, run_service)
+from repro.service import (BulletinTransport, PersonalizedServer,
+                           ServiceConfig, init_service_state,
+                           resume_service, run_service)
 from repro.service.driver import checkpoint_service
+from repro.core.chain import Blockchain
 
 OUT = os.path.join(os.path.dirname(__file__), "BENCH_service.json")
 
@@ -103,9 +106,12 @@ def bench_driver(fed, apply_fn, init_fn, opt, data, reps):
     compile_s = time.time() - t0
     # warm periods: the driver reuses ONE compiled segment for every
     # period, so steady-state cadence excludes compilation entirely
+    # (continue from period 1 so the ledger keeps covering the state's
+    # round counter — resume_service refuses a lagging ledger)
     t0 = time.time()
     state, chain, _ = run_service(apply_fn, opt, fed, svc, state, data,
-                                  periods=reps, chain=chain)
+                                  periods=reps + 1, chain=chain,
+                                  start_period=1)
     warm_period_s = (time.time() - t0) / reps
     with tempfile.TemporaryDirectory() as tmp:
         save = timed(lambda: checkpoint_service(
@@ -119,6 +125,52 @@ def bench_driver(fed, apply_fn, init_fn, opt, data, reps):
         "checkpoint_save_median_s": save["median_s"],
         "resume_median_s": resume["median_s"],
     }
+
+
+def bench_transport(fed, apply_fn, init_fn, opt, data, reps):
+    """Cost of the hardened transport (DESIGN.md §15): warm period time
+    on the fault-free path with NO plan vs a ZERO-rate plan (the full
+    fault machinery engaged, injecting nothing — its pure overhead) vs
+    LIGHT chaos (faults actually firing). Backoff sleeps are no-ops so
+    the chaos column times the degraded-mode compute (verdicts, masking,
+    merge_delivery, checksums), not simulated network latency."""
+    svc = ServiceConfig(reselect_every=3, keep_last_k=2)
+    # light chaos, seed-checked: no retry budget exhausts and no period
+    # loses every announcement through 12 periods
+    chaos = FaultPlan(seed=0, drop=0.05, delay=0.05, duplicate=0.1,
+                      corrupt=0.05, straggle=0.1, publish_fail=0.2,
+                      fetch_fail=0.1)
+    modes = (("no_plan", None), ("zero_rate_plan", FaultPlan(seed=0)),
+             ("light_chaos", chaos))
+    out = {}
+    for name, plan in modes:
+        state = init_service_state(
+            init_state(apply_fn, init_fn, opt, fed,
+                       jax.random.PRNGKey(0)), svc)
+        xp = BulletinTransport(Blockchain(), plan=plan,
+                               sleep=lambda s: None)
+        # stamp each period boundary inside ONE driver call: the single
+        # compile lands before the first stamp, so the diffs are pure
+        # warm-period times
+        stamps = []
+        run_service(apply_fn, opt, fed, svc, state, data,
+                    periods=reps + 2, transport=xp,
+                    log=lambda _msg: stamps.append(time.time()))
+        out[name] = {"warm_period_s": float(np.median(np.diff(stamps))),
+                     "warm_periods_timed": len(stamps) - 1,
+                     "fault_trace": xp.trace.snapshot()}
+        print(f"transport {name:15s}: warm period "
+              f"{out[name]['warm_period_s'] * 1e3:8.1f} ms  "
+              f"trace {out[name]['fault_trace']}")
+    base = out["no_plan"]["warm_period_s"]
+    out["fault_free_overhead_frac"] = \
+        out["zero_rate_plan"]["warm_period_s"] / base - 1.0
+    out["light_chaos_overhead_frac"] = \
+        out["light_chaos"]["warm_period_s"] / base - 1.0
+    print(f"transport fault-free overhead "
+          f"{out['fault_free_overhead_frac'] * 100:+.1f}%  "
+          f"light chaos {out['light_chaos_overhead_frac'] * 100:+.1f}%")
+    return out
 
 
 def main():
@@ -152,6 +204,8 @@ def main():
                                  fed.num_clients, reps),
         "driver": bench_driver(fed, apply_fn, init_fn, opt, data,
                                max(2, reps // 2)),
+        "transport": bench_transport(fed, apply_fn, init_fn, opt, data,
+                                     max(2, reps // 2)),
     }
     with open(OUT, "w") as fh:
         json.dump(out, fh, indent=1)

@@ -13,6 +13,10 @@
 # bit-exact fallback) + the §13 continuous-service smoke (3 churned
 # reselection periods, kill after 2, bit-exact resume + ledger
 # verification across the restart, batched personalized serving)
+# + the §15 chaos soak (every fault kind of a seeded FaultPlan firing
+# against the hardened transport: degraded rounds within tolerance of
+# fault-free, crash + truncated snapshot + forked ledger recovered
+# bitwise, identical fault traces for the same seed)
 # + a 1024-client dryrun on the tiled backend
 # (the 10^4-client scaling path lowered under sharding, in a fresh
 # process because jax locks the device count at first init).
@@ -56,6 +60,9 @@ python scripts/ann_smoke.py
 
 echo "== continuous federation service: churn + kill/resume (DESIGN.md §13) =="
 python scripts/service_smoke.py
+
+echo "== chaos soak: faults + degraded mode + crash/fork recovery (DESIGN.md §15) =="
+python scripts/chaos_smoke.py
 
 echo "== attack-resilience example (smoke) =="
 python examples/attack_resilience.py --clients 6 --rounds 3 \

@@ -18,5 +18,10 @@ in a comment.
 from __future__ import annotations
 
 # number of `# analysis: host-ok` comments under the default lint dirs
-# (src/repro/{core,kernels,launch,service,train,checkpoint})
-EXPECTED_HOST_OK = 28
+# (src/repro/{core,kernels,launch,service,train,checkpoint}); PR 10
+# added 11: the fault layer (core/faults.py — deterministic verdicts,
+# counters, CLI spec parsing), the bulletin-board transport
+# (service/transport.py — the device->host announcement boundary), and
+# the crash-safe resume path (driver min_round pull, chain.head_round,
+# store.steps filename parsing)
+EXPECTED_HOST_OK = 39

@@ -528,6 +528,20 @@ def _head_target_builders():
         seg = make_segment_fn(svc_prog, 2, metrics_tap=lambda s: None)
         return seg, ssd, ssd_labels
 
+    def _service_degraded():
+        # a DEGRADED round (DESIGN.md §15): stragglers masked inactive
+        # mid-service and a stale re-joiner with nonzero code_age —
+        # the disclosure boundary must hold on the faulted path too
+        # (the -inf masking / staleness discount are extra dataflow
+        # through the Eq. 8 scores into the ledger-publish sink)
+        import jax.numpy as jnp
+        from repro.service.membership import mask_stragglers
+        degraded = mask_stragglers(
+            svc_state._replace(
+                code_age=jnp.arange(t["m"], dtype=jnp.int32)),
+            jnp.arange(t["m"]) == 1)
+        return svc_prog.global_round, (degraded, data), ssd_labels
+
     def _serving_forward():
         import jax
         import jax.numpy as jnp
@@ -553,6 +567,7 @@ def _head_target_builders():
         ("baseline-kdpdfl", _baseline("kdpdfl")),
         ("service-global-round", _service_global),
         ("service-segment-tapped", _service_segment_tap),
+        ("service-degraded-round", _service_degraded),
         ("serving-forward", _serving_forward),
     ]
 

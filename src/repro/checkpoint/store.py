@@ -7,7 +7,7 @@ from __future__ import annotations
 
 import os
 import re
-from typing import Any, Optional
+from typing import Any, List, Optional
 
 import jax
 import numpy as np
@@ -59,13 +59,20 @@ def save(ckpt_dir: str, step: int, tree: Any, *,
     return path
 
 
-def latest_step(ckpt_dir: str) -> Optional[int]:
+def steps(ckpt_dir: str) -> List[int]:
+    """All retained snapshot steps, ascending. The crash-safe resume
+    path walks this list backwards: a truncated/corrupt newest file
+    falls back to the previous retained snapshot."""
     if not os.path.isdir(ckpt_dir):
-        return None
+        return []
     # analysis: host-ok — int() parses snapshot filenames, not device values
-    steps = [int(m.group(1)) for f in os.listdir(ckpt_dir)
-             if (m := re.match(r"step_(\d+)\.npz$", f))]
-    return max(steps) if steps else None
+    return sorted(int(m.group(1)) for f in os.listdir(ckpt_dir)
+                  if (m := re.match(r"step_(\d+)\.npz$", f)))
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    found = steps(ckpt_dir)
+    return found[-1] if found else None
 
 
 def restore(ckpt_dir: str, step: int, like: Any) -> Any:

@@ -136,6 +136,16 @@ class Blockchain:
                 return False
         return True
 
+    def head_round(self) -> int:  # analysis: host-ok — int() on ledger JSON payloads, not device values
+        """Highest round index on chain; -1 for a genesis-only ledger.
+        The resume path compares this against the checkpoint's round
+        counter to catch silent ledger rollback (transport.py)."""
+        for b in reversed(self.blocks):
+            r = b.payload.get("round")
+            if r is not None:
+                return int(r)
+        return -1
+
     def round_block(self, round_idx: int) -> Optional[Block]:
         for b in reversed(self.blocks):
             if b.payload.get("round") == round_idx:

@@ -35,7 +35,7 @@ from repro.data import DATASETS
 from repro.models import apply_client_model, init_client_model
 from repro.optim import adam
 from repro.service import (ServiceConfig, init_service_state, parse_events,
-                           resume_service, run_service)
+                           parse_fault_spec, resume_service, run_service)
 
 MODEL_FOR = {"mnist": mnist_cnn, "aecg": aecg_tcn, "seeg": seeg_tcn}
 
@@ -143,14 +143,17 @@ def run_service_federation(dataset: str = "mnist", periods: int = 3,
                            staleness_lambda: float = 0.5,
                            checkpoint_every: int = 1, keep_last_k: int = 3,
                            ckpt_dir: str = None, resume: bool = False,
-                           log=print):
+                           faults: str = "", log=print):
     """The continuous-service scenario (DESIGN.md §13): the same
     construction as `run_federation`, driven by `repro.service` instead
     of run_rounds — unbounded reselection periods, churn events between
     them (`churn` = "period:kind:client,..."), per-client gossip
     budgets (`gossip_counts` = comma list of G_i), durable checkpoints
-    under `ckpt_dir`, and `--resume` picking up a killed service from
-    its latest snapshot (bit-exact, verified against the ledger).
+    under `ckpt_dir`, `--resume` picking up a killed service from
+    its latest readable snapshot (bit-exact, verified against the
+    recovered ledger), and `faults` (a `core.faults.parse_fault_spec`
+    string, e.g. "seed=7,drop=0.1,straggle=0.2") running the whole
+    service under deterministic fault injection (DESIGN.md §15).
     Evaluation reports the ACTIVE cohort — departed clients' frozen
     models don't dilute the service metric. Returns
     (state, chain, history)."""
@@ -183,10 +186,11 @@ def run_service_federation(dataset: str = "mnist", periods: int = 3,
     else:
         state, chain, start_period = template, Blockchain(), 0
     events = parse_events(churn) if churn else []
+    plan = parse_fault_spec(faults) if faults else None
     state, chain, history = run_service(
         apply_fn, opt, fed, svc, state, data, periods=periods,
         events=events, chain=chain, ckpt_dir=ckpt_dir,
-        start_period=start_period,
+        start_period=start_period, faults=plan,
         eval_fn=lambda st, d: {"acc": evaluate(
             apply_fn, st.fed, d,
             honest_mask=st.active.astype(jnp.float32))["mean_acc"]},
@@ -376,6 +380,11 @@ def main(argv=None):
     ap.add_argument("--resume", action="store_true",
                     help="[service] resume from the latest checkpoint "
                          "in --ckpt-dir")
+    ap.add_argument("--faults", default="",
+                    help="[service] deterministic fault-injection spec "
+                         "'seed=7,drop=0.1,delay=0.1,corrupt=0.1,"
+                         "straggle=0.2,publish_fail=0.3,crash=2,fork=1' "
+                         "(core.faults.parse_fault_spec, DESIGN.md §15)")
     args = ap.parse_args(argv)
     if args.service:
         _, _, history = run_service_federation(
@@ -385,7 +394,8 @@ def main(argv=None):
             gossip_counts=args.gossip_counts,
             staleness_lambda=args.staleness_lambda,
             keep_last_k=args.keep_last_k,
-            ckpt_dir=args.ckpt_dir or None, resume=args.resume)
+            ckpt_dir=args.ckpt_dir or None, resume=args.resume,
+            faults=args.faults)
         print(json.dumps(history[-3:], indent=1))
         return
     if args.dryrun:

@@ -10,13 +10,23 @@ personalized models of the live federation.
 
   membership.py  padded-client-axis churn layer: ServiceState (active
                  mask, per-client code_age + gossip budget), join/leave
-                 events, participation masks
+                 events, participation + degraded-round masks
+  transport.py   hardened bulletin-board seam: checksummed
+                 announcements, bounded-retry publish/fetch,
+                 deterministic fault injection (core.faults.FaultPlan),
+                 longest-valid-chain recovery
   driver.py      the continuous driver: compiled segments inside,
-                 host sync + Blockchain publish + checkpoint between
-                 periods; resume_service restores bit-exact
+                 host sync + transport publish + checkpoint between
+                 periods; resume_service restores bit-exact and
+                 crash-safe
   serving.py     PersonalizedServer — batched inference across
                  per-client personalized models
 """
+from repro.core.faults import (  # noqa: F401  (re-export: the fault
+    FaultPlan,                   # plan rides the service API)
+    FaultTrace,
+    parse_fault_spec,
+)
 from repro.service.membership import (  # noqa: F401
     ChurnEvent,
     ServiceConfig,
@@ -25,11 +35,21 @@ from repro.service.membership import (  # noqa: F401
     init_service_state,
     join,
     leave,
+    mask_stragglers,
+    merge_delivery,
     parse_events,
     participation_mask,
     staleness_discount,
 )
+from repro.service.transport import (  # noqa: F401
+    BulletinTransport,
+    LedgerRollbackError,
+    RetryPolicy,
+    TransportError,
+    recover_chain,
+)
 from repro.service.driver import (  # noqa: F401
+    CrashInjected,
     checkpoint_num_clients,
     resume_service,
     run_service,

@@ -31,11 +31,22 @@ masks:
 Unlike `run_rounds`, every period has the same (full) length — a
 service has no final-rounds tail — so exactly ONE segment compiles per
 run and the round axis is unbounded.
+
+Faults and degraded rounds (DESIGN.md §15): every ledger interaction
+routes through `service.transport.BulletinTransport` — checksummed
+announcements, bounded-retry publish/fetch, and (when a
+`core.faults.FaultPlan` is supplied) deterministic fault injection.
+Stragglers mask out of the segment through the SAME churn masking that
+join/leave uses; failed deliveries revert to last-known-good codes
+after the segment (`membership.merge_delivery`); per-period fault
+counters stream through the existing io_callback metric channel and
+land on the period's history entries.
 """
 from __future__ import annotations
 
 import os
 import time
+import warnings
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -45,17 +56,33 @@ import numpy as np
 from repro.analysis.privacy import sink
 from repro.checkpoint import store
 from repro.configs.paper_models import FedConfig
-from repro.core.chain import (Blockchain, load_chain, lsh_code_hex,
-                              save_chain, sha256_commit)
+from repro.core.chain import Blockchain, save_chain
+from repro.core.faults import FaultPlan, fault_scalars
 from repro.core.protocol import (FedState, _round_metrics, announce_phase,
                                  exchange_phase, select_phase, update_phase)
 from repro.core.rounds import RoundProgram, extract_history, make_segment_fn
 from repro.service.membership import (ChurnEvent, ServiceConfig,
                                       ServiceState, apply_events,
+                                      mask_stragglers, merge_delivery,
                                       participation_mask,
                                       staleness_discount, validate_events)
+from repro.service.transport import (CHAIN_FILE, BulletinTransport,
+                                     recover_chain, rollback_view,
+                                     write_fork_view)
 
-CHAIN_FILE = "chain.json"
+
+class CrashInjected(RuntimeError):
+    """A FaultPlan-scheduled crash-restart fired: the driver dies after
+    the period's segment but BEFORE any durable effect (publish /
+    checkpoint), exactly where a real process kill hurts most. The
+    chaos soak catches this, resumes from the last checkpoint, and
+    asserts bitwise equivalence with the uninterrupted run."""
+
+    def __init__(self, period: int):
+        super().__init__(
+            f"fault-injected crash at period {period} (resume from the "
+            f"last checkpoint to continue)")
+        self.period = period
 
 
 # ---------------------------------------------------------------------------
@@ -111,7 +138,7 @@ def service_program(apply_fn: Callable, optimizer, fed: FedConfig,
             exch, rng_upd, participate=state.active)
         ann = announce_phase(fed, params, sel, exch, st.round)
         a = state.active
-        # these merged fields are what service_publisher reads onto the
+        # these merged fields are what transport.collect reads onto the
         # host ledger and what checkpoints as chain.json — the service's
         # disclosure point (repro.analysis.taint verifies it)
         codes, rankings, commitments = sink("ledger-publish", (
@@ -148,28 +175,8 @@ def service_program(apply_fn: Callable, optimizer, fed: FedConfig,
 
 
 # ---------------------------------------------------------------------------
-# ledger + durable state
+# durable state
 # ---------------------------------------------------------------------------
-def service_publisher(chain: Blockchain, num_clients: int) -> Callable:
-    """Publish a period's announcements for ACTIVE clients only —
-    departed clients announce nothing (their last block stands)."""
-
-    def publish(round_idx: int, state: ServiceState):  # analysis: host-ok
-        # intentional device->host pull, once per reselection period:
-        # the ledger records announcements, not device arrays (§8)
-        active = np.asarray(state.active)
-        codes = np.asarray(state.fed.codes)
-        rankings = np.asarray(state.fed.rankings)
-        ann = {i: {"lsh": lsh_code_hex(codes[i]),
-                   "commit": sha256_commit(rankings[i])}
-               for i in range(num_clients) if active[i]}
-        reveals = {i: [int(x) for x in rankings[i]]
-                   for i in range(num_clients) if active[i]}
-        chain.publish_round(round_idx, ann, reveals=reveals)
-
-    return publish
-
-
 def checkpoint_service(ckpt_dir: str, period: int, state: ServiceState,
                        chain: Blockchain, *, keep_last_k: int) -> str:
     """One durable snapshot: the full ServiceState pytree as
@@ -194,22 +201,45 @@ def checkpoint_num_clients(ckpt_dir: str) -> int:  # analysis: host-ok — reads
 
 def resume_service(ckpt_dir: str, like: ServiceState
                    ) -> Tuple[ServiceState, Blockchain, int]:
-    """Restore (state, chain, next_period) from the latest checkpoint.
+    """Restore (state, chain, next_period), crash-safely.
 
     `like` is a template ServiceState (same configs/shapes as the run
-    being resumed — rebuild it with init_service_state). The restored
-    chain must verify BEFORE the service continues: a resume from a
-    tampered ledger is a trust violation, not a degraded start."""
-    period = store.latest_step(ckpt_dir)
-    if period is None:
+    being resumed — rebuild it with init_service_state).
+
+    Degraded starts this survives: a truncated/corrupt newest snapshot
+    falls back (with a warning) to the previous retained one; a
+    tampered or missing chain.json falls back to any valid
+    chain.fork*.json view, longest-valid-chain wins (transport.
+    recover_chain). Trust violations it refuses: NO ledger view
+    verifying at all (ValueError, as in PR 8), and a ledger that
+    verifies but sits BEHIND the checkpoint's round counter
+    (LedgerRollbackError — silent rollback is a fork symptom, not a
+    degraded start)."""
+    retained = store.steps(ckpt_dir)
+    if not retained:
         raise FileNotFoundError(f"no checkpoint under {ckpt_dir!r}")
-    # restore() hands back numpy leaves; put them on device so the
-    # resumed state drops into the compiled segment unchanged
-    state = jax.tree.map(jnp.asarray, store.restore(ckpt_dir, period, like))
-    chain = load_chain(os.path.join(ckpt_dir, CHAIN_FILE))
-    if not chain.verify_chain():
+    state, period = None, -1
+    for step in reversed(retained):
+        try:
+            # restore() hands back numpy leaves; put them on device so
+            # the resumed state drops into the compiled segment
+            # unchanged
+            state = jax.tree.map(jnp.asarray,
+                                 store.restore(ckpt_dir, step, like))
+            period = step
+            break
+        except Exception as e:
+            warnings.warn(
+                f"checkpoint step_{step:08d}.npz unreadable ({e}); "
+                f"falling back to the previous retained snapshot")
+    if state is None:
         raise ValueError(
-            f"restored ledger fails verify_chain ({ckpt_dir!r})")
+            f"every retained checkpoint under {ckpt_dir!r} failed to "
+            f"load ({len(retained)} tried) — no snapshot to resume from")
+    # the checkpoint's round counter: the chain must cover the period
+    # that produced this snapshot, else it silently lost history
+    min_round = int(state.period_start)  # analysis: host-ok — one scalar pull to cross-check ledger coverage at resume
+    chain = recover_chain(ckpt_dir, min_round=min_round)
     return state, chain, period + 1
 
 
@@ -223,51 +253,121 @@ def run_service(apply_fn: Callable, optimizer, fed: FedConfig,
                 ckpt_dir: Optional[str] = None, start_period: int = 0,
                 eval_fn: Optional[Callable] = None,
                 metrics_tap: Optional[Callable] = None,
-                log: Optional[Callable] = None
+                log: Optional[Callable] = None,
+                faults: Optional[FaultPlan] = None,
+                transport: Optional[BulletinTransport] = None
                 ) -> Tuple[ServiceState, Blockchain, List[Dict]]:
     """Drive reselection periods `start_period .. periods-1`.
 
-    Per period: apply churn events -> run ONE compiled segment of
-    svc.reselect_every rounds -> publish active announcements to the
-    ledger -> checkpoint (every svc.checkpoint_every periods, retaining
-    svc.keep_last_k snapshots). `metrics_tap(scalars_dict)` streams
-    per-round scalars from INSIDE the compiled segment (ordered
-    io_callback); the returned history is extracted from the stacked
-    period metrics after the host sync, exactly like run_rounds.
+    Per period: apply churn events -> mask this period's stragglers
+    (fault plans only) -> run ONE compiled segment of
+    svc.reselect_every rounds -> reconcile announcement delivery and
+    publish through the hardened transport (checksums, bounded retry,
+    read-back fetch) -> checkpoint (every svc.checkpoint_every periods,
+    retaining svc.keep_last_k snapshots). `metrics_tap(scalars_dict)`
+    streams per-round scalars from INSIDE the compiled segment (ordered
+    io_callback) — under a fault plan each round's dict additionally
+    carries the period's fault counters (`core.faults.fault_scalars`).
+    The returned history is extracted from the stacked period metrics
+    after the host sync, exactly like run_rounds, with the fault
+    counters attached to each period's last entry.
+
+    `faults=FaultPlan(...)` turns on deterministic fault injection
+    (shorthand for transport=BulletinTransport(chain, plan=faults));
+    pass `transport=` directly to control retry policy or sleeping. A
+    plan-scheduled crash period raises CrashInjected after the segment,
+    before publish/checkpoint — except at `start_period` itself, so a
+    resume that lands on the crash period replays it instead of dying
+    in a loop.
 
     Restart recipe: rebuild (fed, svc, state-template, data, events)
     from the same configuration, then
     `state, chain, p0 = resume_service(ckpt_dir, template)` and call
     run_service again with start_period=p0 — per-round metrics are
-    identical to the uninterrupted run (regression-tested).
+    identical to the uninterrupted run (regression-tested, fault plans
+    included).
     """
     events = validate_events(events, fed.num_clients)
     chain = chain if chain is not None else Blockchain()
-    publish = service_publisher(chain, fed.num_clients)
+    if transport is None:
+        transport = BulletinTransport(chain, plan=faults)
+    elif faults is not None and transport.plan is not faults:
+        raise ValueError("pass either faults= or a transport= carrying "
+                         "its own plan, not both")
+    chain = transport.chain
     program = service_program(apply_fn, optimizer, fed, svc)
     length = svc.reselect_every
+
+    # the fault-counter side channel into the compiled segment's metric
+    # stream: the host cell is rewritten before each period's segment
+    # runs, and the ordered io_callback tap reads it as rounds stream
+    fault_cell: Dict[str, float] = {}
+    tap = metrics_tap
+    if metrics_tap is not None and transport.plan is not None:
+        def tap(scalars):
+            metrics_tap({**scalars, **fault_cell})
     seg_fn = jax.jit(make_segment_fn(program, length, eval_fn=eval_fn,
-                                     metrics_tap=metrics_tap))
+                                     metrics_tap=tap))
     history: List[Dict] = []
     for period in range(start_period, periods):
         state = apply_events(state, events, period)
+        base_active = state.active
+        pf = transport.period_faults(period, fed.num_clients)
+        scalars = None
+        if pf is not None:
+            announcing = np.asarray(base_active, bool)  # analysis: host-ok — membership mask pull for host-side fault bookkeeping
+            scalars = fault_scalars(pf, announcing)
+            fault_cell.clear()
+            fault_cell.update(scalars)
+            stragglers = transport.straggler_mask(period, announcing)
+            if stragglers.any():
+                # degraded round: proceed on partial announcements by
+                # the same masking churn uses (bit-identical to those
+                # clients leaving for one period)
+                state = mask_stragglers(state, stragglers)
+            pre = (state.fed.codes, state.fed.rankings,
+                   state.fed.commitments, state.code_age)
+        seg_active = state.active
         t0 = time.time()
         state, metrics = seg_fn(state, data)
         jax.block_until_ready(metrics)
         dt = time.time() - t0
+        if pf is not None and pf.crash and period != start_period:
+            raise CrashInjected(period)
         r0 = period * length
-        publish(r0, state)
-        history.extend(extract_history(metrics, r0, length))
+        if pf is not None:
+            state = state._replace(active=base_active)
+            ann, reveals, failed, delayed = transport.collect(
+                period, np.asarray(seg_active, bool), state)  # analysis: host-ok — announcement pull routes through the transport
+            if failed.any() or delayed.any():
+                state = merge_delivery(state, *pre, failed=failed,
+                                       delayed=delayed)
+        else:
+            ann, reveals, _, _ = transport.collect(
+                period, np.asarray(seg_active, bool), state)  # analysis: host-ok — announcement pull routes through the transport
+        transport.publish(period, r0, ann, reveals)
+        transport.fetch(period, r0)  # read-back verification
+        entries = extract_history(metrics, r0, length)
+        if scalars is not None:
+            entries[-1].update(scalars)
+        history.extend(entries)
         if ckpt_dir is not None and \
                 (period + 1 - start_period) % svc.checkpoint_every == 0:
             checkpoint_service(ckpt_dir, period, state, chain,
                                keep_last_k=svc.keep_last_k)
+            if transport.plan is not None and \
+                    transport.plan.fork_at == period:
+                # fault injection: a competing rolled-back ledger view
+                # appears next to chain.json — resume must arbitrate
+                write_fork_view(ckpt_dir, rollback_view(chain, 1))
         if log is not None:
             last = history[-1]
             parts = [f"{k} {last[k]:.4f}" for k in ("acc", "mean_loss")
                      if k in last]
+            degraded = " DEGRADED" if scalars and \
+                scalars.get("degraded_round") else ""
             log(f"period {period:3d} (rounds {r0}..{r0 + length - 1}) "
                 + " ".join(parts)
                 + f" active {last['active_frac']:.2f}"
-                + f" ({dt:.1f}s)")
+                + f" ({dt:.1f}s){degraded}")
     return state, chain, history

@@ -191,3 +191,48 @@ def participation_mask(state: ServiceState, epoch) -> jnp.ndarray:
     the period): active members whose gossip budget G_i covers the
     global round (1) plus `epoch + 1` gossip epochs."""
     return state.active & (epoch < state.gossip_count - 1)
+
+
+# ---------------------------------------------------------------------------
+# degraded-round masking (DESIGN.md §15)
+# ---------------------------------------------------------------------------
+def mask_stragglers(state: ServiceState, stragglers) -> ServiceState:
+    """Treat this period's stragglers as churn-inactive for the
+    duration of ONE segment: the round proceeds on partial
+    announcements through exactly the same -inf-score / update-freeze
+    / announce-freeze masking that join/leave already uses. This is
+    the masking-equivalence invariant — a round with k stragglers is
+    bit-identical to a round where those k clients left and rejoined
+    (property-tested in tests/test_faults.py). The driver restores the
+    real membership mask after the segment."""
+    return state._replace(
+        active=state.active & ~jnp.asarray(stragglers, bool))
+
+
+def merge_delivery(state: ServiceState, pre_codes, pre_rankings,
+                   pre_commitments, pre_age, *, failed,
+                   delayed) -> ServiceState:
+    """Reconcile the in-graph announcement merge with what the bulletin
+    board ACTUALLY accepted (transport.collect verdicts).
+
+    `failed` clients (dropped or checksum-rejected): the board kept
+    their last block, so their device-side codes / rankings /
+    commitments revert to the pre-segment snapshot and their code_age
+    grows one period — indistinguishable from not announcing at all.
+    `delayed` clients: the fresh announcement stands, but it landed
+    past the selection deadline, so next period's Eq. 8 weight sees
+    `code_age >= 1`. With all-False masks every jnp.where is a bitwise
+    no-op, which is what keeps the fault-free path bit-identical to
+    PR 8's driver."""
+    failed = jnp.asarray(failed, bool)
+    delayed = jnp.asarray(delayed, bool)
+    fed = state.fed
+    codes = jnp.where(failed[:, None], pre_codes, fed.codes)
+    rankings = jnp.where(failed[:, None], pre_rankings, fed.rankings)
+    commitments = jnp.where(failed, pre_commitments, fed.commitments)
+    age = jnp.where(failed, pre_age + 1, state.code_age)
+    age = jnp.where(delayed & ~failed, jnp.maximum(age, 1), age)
+    return state._replace(
+        fed=fed._replace(codes=codes, rankings=rankings,
+                         commitments=commitments),
+        code_age=age)

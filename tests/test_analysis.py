@@ -60,8 +60,9 @@ def test_cli_strict_head_clean_and_writes_json(tmp_path):
     assert payload["findings"] == []
     assert len(payload["kernel_entries"]) == 9
     # the full HEAD taint surface rides in the same report
-    assert len(payload["taint_targets"]) == 15
+    assert len(payload["taint_targets"]) == 16
     assert "wpfed-global-round" in payload["taint_targets"]
+    assert "service-degraded-round" in payload["taint_targets"]
     assert payload["host_ok"]["count"] == EXPECTED_HOST_OK
     assert len(payload["host_ok"]["sites"]) == EXPECTED_HOST_OK
     assert payload["wall_time_s"] > 0

@@ -1,0 +1,467 @@
+"""Fault-injection + degraded-mode protocol tests (DESIGN.md §15):
+deterministic fault verdicts, retry/backoff, checksum rejection and
+last-known-good fallback, the straggler == churn masking-equivalence
+invariant, crash-safe checkpoint fallback, ledger rollback refusal,
+and longest-valid-chain fork recovery."""
+import dataclasses
+import os
+import types
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import init_state
+from repro.core.chain import Blockchain, load_chain, save_chain
+from repro.core.faults import (FaultPlan, fault_scalars, fault_u01,
+                               leading_failures, parse_fault_spec,
+                               period_faults)
+from repro.service import (BulletinTransport, ChurnEvent, CrashInjected,
+                           LedgerRollbackError, RetryPolicy, ServiceConfig,
+                           TransportError, init_service_state, mask_stragglers,
+                           resume_service, run_service)
+from repro.service.transport import (announcement_checksum, divergent_view,
+                                     recover_chain, rollback_view,
+                                     write_fork_view)
+
+
+@pytest.fixture(scope="module")
+def svc_env(tiny_fed):
+    svc = ServiceConfig(reselect_every=2, keep_last_k=2)
+    state = init_service_state(
+        init_state(tiny_fed["apply_fn"], tiny_fed["init_fn"],
+                   tiny_fed["opt"], tiny_fed["fed"],
+                   jax.random.PRNGKey(0)), svc)
+    args = (tiny_fed["apply_fn"], tiny_fed["opt"], tiny_fed["fed"], svc)
+    return {"svc": svc, "state": state, "args": args, **tiny_fed}
+
+
+def _fake_state(m=6, words=4, n=3, seed=0):
+    """The minimal state surface transport.collect reads."""
+    rs = np.random.RandomState(seed)
+    fed = types.SimpleNamespace(
+        codes=rs.randint(0, 2**32, (m, words), dtype=np.uint32),
+        rankings=rs.randint(0, m, (m, n)).astype(np.int32))
+    return types.SimpleNamespace(fed=fed)
+
+
+# ---------------------------------------------------------------------------
+# the fault plan: typed, seeded, deterministic
+# ---------------------------------------------------------------------------
+def test_plan_validation_and_spec_parsing():
+    with pytest.raises(ValueError, match="outside"):
+        FaultPlan(drop=1.5)
+    with pytest.raises(ValueError, match="crash_periods"):
+        FaultPlan(crash_periods=(-1,))
+    plan = parse_fault_spec(
+        "seed=7, drop=0.1, straggle=0.2, publish_fail=0.3, "
+        "crash=2, crash=5, fork=1")
+    assert plan == FaultPlan(seed=7, drop=0.1, straggle=0.2,
+                             publish_fail=0.3, crash_periods=(2, 5),
+                             fork_at=1)
+    assert plan.eventually_delivering()
+    assert not FaultPlan(drop=1.0).eventually_delivering()
+    with pytest.raises(ValueError, match="unknown fault spec key"):
+        parse_fault_spec("dorp=0.1")
+    with pytest.raises(ValueError, match="key=value"):
+        parse_fault_spec("drop")
+
+
+def test_verdicts_deterministic_and_seed_sensitive():
+    plan = FaultPlan(seed=3, drop=0.5, delay=0.5, duplicate=0.5,
+                     corrupt=0.5, straggle=0.5, publish_fail=0.5)
+    a = period_faults(plan, 4, 32, 5)
+    b = period_faults(plan, 4, 32, 5)
+    for f in ("stragglers", "drop", "delay", "duplicate", "corrupt"):
+        assert np.array_equal(getattr(a, f), getattr(b, f))
+    assert a.publish_failures == b.publish_failures
+    # a different seed is a different fault universe
+    c = period_faults(dataclasses.replace(plan, seed=4), 4, 32, 5)
+    assert any(not np.array_equal(getattr(a, f), getattr(c, f))
+               for f in ("stragglers", "drop", "delay", "corrupt"))
+    # draws are uniform-ish and stream-independent
+    us = [fault_u01(0, "drop", p, client=c)
+          for p in range(20) for c in range(20)]
+    assert 0.4 < np.mean(us) < 0.6
+    assert all(0.0 <= u < 1.0 for u in us)
+    assert fault_u01(0, "drop", 1, client=2) != \
+        fault_u01(0, "delay", 1, client=2)
+
+
+def test_verdict_precedence_mutually_exclusive():
+    plan = FaultPlan(seed=1, drop=1.0, delay=1.0, duplicate=1.0,
+                     corrupt=1.0)
+    pf = period_faults(plan, 0, 8, 5)
+    assert pf.drop.all()
+    # drop wins: nothing is simultaneously dropped and corrupt/delayed
+    assert not (pf.drop & pf.corrupt).any()
+    assert not (pf.drop & pf.delay).any()
+    assert not (pf.drop & pf.duplicate).any()
+
+
+def test_fault_scalars_count_announcing_only():
+    plan = FaultPlan(seed=1, drop=1.0, straggle=0.0)
+    pf = period_faults(plan, 0, 6, 5)
+    announcing = np.array([True, True, False, False, False, False])
+    s = fault_scalars(pf, announcing)
+    assert s["fault_dropped"] == 2.0
+    assert s["degraded_round"] == 1.0
+    quiet = fault_scalars(period_faults(FaultPlan(seed=1), 0, 6, 5),
+                          announcing)
+    assert quiet["degraded_round"] == 0.0
+    assert all(v == 0.0 for v in quiet.values())
+
+
+# ---------------------------------------------------------------------------
+# retry / backoff
+# ---------------------------------------------------------------------------
+def test_retry_policy_backoff_and_validation():
+    rp = RetryPolicy(max_attempts=5, base_delay_s=0.02, max_delay_s=0.1,
+                     jitter=0.25)
+    # exponential until the cap, jitter bounded
+    assert rp.delay_s(0, 0.5) == pytest.approx(0.02)
+    assert rp.delay_s(1, 0.5) == pytest.approx(0.04)
+    assert rp.delay_s(4, 0.5) == pytest.approx(0.1)  # capped
+    assert rp.delay_s(0, 1.0) <= 0.02 * 1.25 + 1e-12
+    assert rp.delay_s(0, 0.0) >= 0.02 * 0.75 - 1e-12
+    with pytest.raises(ValueError, match="max_attempts"):
+        RetryPolicy(max_attempts=0)
+    with pytest.raises(ValueError, match="jitter"):
+        RetryPolicy(jitter=2.0)
+
+
+def test_publish_retries_then_succeeds_with_backoff():
+    # find a seed whose period-0 publish stream fails 1..3 leading
+    # attempts — deterministic thereafter
+    seed = next(s for s in range(200)
+                if 1 <= leading_failures(FaultPlan(seed=s,
+                                                   publish_fail=0.6),
+                                         "publish_fail", 0, 5) <= 3)
+    plan = FaultPlan(seed=seed, publish_fail=0.6)
+    n_fail = leading_failures(plan, "publish_fail", 0, 5)
+    sleeps = []
+    xp = BulletinTransport(Blockchain(), plan=plan, sleep=sleeps.append)
+    blk = xp.publish(0, 0, {0: {"lsh": "ab", "commit": "cd",
+                                "sum": "ef"}}, {0: [1]})
+    assert blk.payload["round"] == 0
+    assert len(sleeps) == n_fail
+    assert xp.trace.counters["publish_fail"] == n_fail
+    assert all(d > 0 for d in sleeps)
+    # replaying the same plan replays the identical retry trace
+    sleeps2 = []
+    xp2 = BulletinTransport(Blockchain(), plan=plan, sleep=sleeps2.append)
+    xp2.publish(0, 0, {0: {"lsh": "ab", "commit": "cd", "sum": "ef"}},
+                {0: [1]})
+    assert sleeps2 == sleeps
+
+
+def test_publish_exhaustion_raises_and_idempotent_republish():
+    xp = BulletinTransport(Blockchain(),
+                           plan=FaultPlan(seed=0, publish_fail=1.0),
+                           sleep=lambda s: None)
+    with pytest.raises(TransportError, match="publish of round 0"):
+        xp.publish(0, 0, {}, {})
+    # fault-free transport: publish twice -> one block, same object
+    ok = BulletinTransport(Blockchain())
+    b1 = ok.publish(0, 0, {0: {"lsh": "ab", "commit": "cd",
+                               "sum": "ef"}}, {})
+    b2 = ok.publish(1, 0, {}, {})
+    assert b2 is b1
+    assert len(ok.chain.blocks) == 2
+    assert ok.fetch(1, 0) is b1
+    with pytest.raises(TransportError, match="missing from the ledger"):
+        ok.fetch(1, 7)
+
+
+# ---------------------------------------------------------------------------
+# the announcement link: checksum, drop, delay, duplicate
+# ---------------------------------------------------------------------------
+def test_checksum_travels_and_rejects_corruption():
+    st = _fake_state()
+    announcing = np.ones(6, bool)
+    ok = BulletinTransport(Blockchain())
+    ann, reveals, failed, delayed = ok.collect(0, announcing, st)
+    assert sorted(ann) == list(range(6)) and not failed.any()
+    for e in ann.values():
+        assert e["sum"] == announcement_checksum(e)
+    # corrupt=1.0: every delivery is damaged in transit and the board's
+    # checksum rejects it — nothing poisoned, everything failed
+    bad = BulletinTransport(Blockchain(),
+                            plan=FaultPlan(seed=2, corrupt=1.0))
+    ann2, _, failed2, _ = bad.collect(0, announcing, st)
+    assert ann2 == {} and failed2.all()
+    assert bad.trace.counters["corrupt"] == 6
+
+
+def test_drop_delay_duplicate_semantics():
+    st = _fake_state()
+    announcing = np.ones(6, bool)
+    drop = BulletinTransport(Blockchain(), plan=FaultPlan(seed=2, drop=1.0))
+    ann, _, failed, delayed = drop.collect(0, announcing, st)
+    assert ann == {} and failed.all() and not delayed.any()
+    late = BulletinTransport(Blockchain(), plan=FaultPlan(seed=2, delay=1.0))
+    ann2, _, failed2, delayed2 = late.collect(0, announcing, st)
+    # delayed announcements LAND (fresh on the board), just late
+    assert sorted(ann2) == list(range(6))
+    assert not failed2.any() and delayed2.all()
+    dup = BulletinTransport(Blockchain(),
+                            plan=FaultPlan(seed=2, duplicate=1.0))
+    ann3, _, failed3, _ = dup.collect(0, announcing, st)
+    # byte-identical second copies dedupe to one entry each
+    assert sorted(ann3) == list(range(6)) and not failed3.any()
+    assert dup.trace.counters["duplicate"] == 6
+    # non-announcing clients are untouched by any fault
+    ann4, _, failed4, _ = drop.collect(1, np.zeros(6, bool), st)
+    assert ann4 == {} and not failed4.any()
+
+
+def test_corrupt_reverts_to_last_known_good_in_service(svc_env):
+    """corrupt=1.0 for one period: the board keeps every client's
+    previous codes — the driver's merged state must match (revert +
+    age bump), not silently diverge from the ledger."""
+    state, data = svc_env["state"], svc_env["data"]
+    plan = FaultPlan(seed=5, corrupt=1.0)
+    s_f, chain_f, hist = run_service(*svc_env["args"], state, data,
+                                     periods=1, faults=plan)
+    # nothing landed: the period's block carries zero announcements
+    blk = chain_f.round_block(0)
+    assert blk is not None and blk.payload["announcements"] == {}
+    # device state reverted to the pre-segment codes, aged one period
+    assert np.array_equal(np.asarray(s_f.fed.codes),
+                          np.asarray(state.fed.codes))
+    assert np.array_equal(np.asarray(s_f.fed.rankings),
+                          np.asarray(state.fed.rankings))
+    assert np.asarray(s_f.code_age).tolist() == [1] * 6
+    assert hist[-1]["fault_corrupt"] == 6.0
+    assert hist[-1]["degraded_round"] == 1.0
+    # params still trained: corruption degrades announcements, not
+    # the round's local work
+    p0_old = jax.tree.leaves(state.fed.params)[0]
+    p0_new = jax.tree.leaves(s_f.fed.params)[0]
+    assert not np.array_equal(np.asarray(p0_old), np.asarray(p0_new))
+
+
+def test_delay_marks_staleness_in_service(svc_env):
+    state, data = svc_env["state"], svc_env["data"]
+    s_f, chain_f, hist = run_service(*svc_env["args"], state, data,
+                                     periods=1,
+                                     faults=FaultPlan(seed=5, delay=1.0))
+    # fresh codes DID land (board and device agree) ...
+    assert not np.array_equal(np.asarray(s_f.fed.codes),
+                              np.asarray(state.fed.codes))
+    blk = chain_f.round_block(0)
+    assert sorted(map(int, blk.payload["announcements"])) == list(range(6))
+    # ... but they arrived past the deadline: staleness discount applies
+    assert np.asarray(s_f.code_age).tolist() == [1] * 6
+    assert hist[-1]["fault_delayed"] == 6.0
+
+
+# ---------------------------------------------------------------------------
+# the masking-equivalence invariant (straggler == one-period churn)
+# ---------------------------------------------------------------------------
+def test_straggler_round_bit_identical_to_churn_round(svc_env):
+    """A round with k stragglers is BIT-IDENTICAL to a round where
+    those same k clients are churn-inactive — the degraded-mode
+    protocol is the churn protocol, not a second code path."""
+    state, data = svc_env["state"], svc_env["data"]
+    m = svc_env["fed"].num_clients
+    # a seed whose period-0 straggler set is a proper non-empty subset
+    seed = next(s for s in range(200) if 0 < period_faults(
+        FaultPlan(seed=s, straggle=0.4), 0, m, 5).stragglers.sum() < m)
+    plan = FaultPlan(seed=seed, straggle=0.4)
+    strag = period_faults(plan, 0, m, 5).stragglers
+    s_f, chain_f, hist_f = run_service(*svc_env["args"], state, data,
+                                       periods=1, faults=plan)
+    events = [ChurnEvent(0, "leave", int(i)) for i in np.nonzero(strag)[0]]
+    s_c, chain_c, hist_c = run_service(*svc_env["args"], state, data,
+                                       periods=1, events=events)
+    # identical protocol state (the faulted run restores membership
+    # after the segment; the churn run's leavers are still out)
+    assert np.array_equal(
+        np.asarray(s_f.active),
+        np.asarray(s_c.active) | strag)
+    for a, b in zip(jax.tree.leaves(s_f._replace(active=s_c.active)),
+                    jax.tree.leaves(s_c)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    # identical ledger content: stragglers announced nothing
+    assert [b.payload for b in chain_f.blocks] == \
+        [b.payload for b in chain_c.blocks]
+    assert set(map(int, chain_f.round_block(0).payload["announcements"])
+               ) == set(np.nonzero(~strag)[0].tolist())
+    # identical per-round metrics (fault counters ride only on the
+    # faulted run's entries)
+    for hf, hc in zip(hist_f, hist_c):
+        for k in hc:
+            assert hf[k] == hc[k]
+    assert hist_f[-1]["fault_stragglers"] == float(strag.sum())
+
+
+def test_fault_free_plan_is_bitwise_noop(svc_env):
+    """An all-zero-rate FaultPlan engages every hardened path (checksums,
+    counter streaming, retry envelope) yet stays bit-identical to no
+    plan at all."""
+    state, data = svc_env["state"], svc_env["data"]
+    s_a, chain_a, hist_a = run_service(*svc_env["args"], state, data,
+                                       periods=1)
+    s_b, chain_b, hist_b = run_service(*svc_env["args"], state, data,
+                                       periods=1, faults=FaultPlan(seed=9))
+    for a, b in zip(jax.tree.leaves(s_a), jax.tree.leaves(s_b)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    assert [b.payload for b in chain_a.blocks] == \
+        [b.payload for b in chain_b.blocks]
+    for ha, hb in zip(hist_a, hist_b):
+        for k in ha:
+            assert ha[k] == hb[k]
+    assert hist_b[-1]["degraded_round"] == 0.0
+    assert "degraded_round" not in hist_a[-1]
+
+
+# ---------------------------------------------------------------------------
+# crash-restart injection
+# ---------------------------------------------------------------------------
+def test_crash_injection_then_resume_bitwise(svc_env, tmp_path):
+    state, data = svc_env["state"], svc_env["data"]
+    plan = FaultPlan(seed=3, crash_periods=(1,))
+    ck = str(tmp_path / "crash")
+    with pytest.raises(CrashInjected, match="period 1"):
+        run_service(*svc_env["args"], state, data, periods=2,
+                    ckpt_dir=ck, faults=plan)
+    # the crash fired after period 1's segment but BEFORE any durable
+    # effect: only period 0 is on disk
+    s_r, chain_r, p0 = resume_service(ck, state)
+    assert p0 == 1
+    assert chain_r.head_round() == 0
+    # resume replays the crash period (no re-crash at start_period)
+    s_k, chain_k, _ = run_service(*svc_env["args"], s_r, data, periods=2,
+                                  chain=chain_r, ckpt_dir=ck,
+                                  start_period=p0, faults=plan)
+    s_u, chain_u, _ = run_service(
+        *svc_env["args"], state, data, periods=2,
+        ckpt_dir=str(tmp_path / "uninterrupted"),
+        faults=dataclasses.replace(plan, crash_periods=()))
+    for a, b in zip(jax.tree.leaves(s_k), jax.tree.leaves(s_u)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    assert [b.payload for b in chain_k.blocks] == \
+        [b.payload for b in chain_u.blocks]
+
+
+# ---------------------------------------------------------------------------
+# crash-safe checkpoints (satellite: truncated-snapshot fallback)
+# ---------------------------------------------------------------------------
+def test_truncated_checkpoint_falls_back_with_warning(svc_env, tmp_path):
+    state, data = svc_env["state"], svc_env["data"]
+    ck = str(tmp_path / "trunc")
+    run_service(*svc_env["args"], state, data, periods=2, ckpt_dir=ck)
+    newest = os.path.join(ck, "step_00000001.npz")
+    blob = open(newest, "rb").read()
+    with open(newest, "wb") as fh:          # simulate a crash mid-write
+        fh.write(blob[:len(blob) // 3])
+    with pytest.warns(UserWarning, match="falling back"):
+        s_r, chain_r, p0 = resume_service(ck, state)
+    assert p0 == 1                          # the previous retained snapshot
+    # the fallback state is the real period-0 state: continuing from it
+    # reproduces the uninterrupted run bitwise
+    s_c, chain_c, _ = run_service(*svc_env["args"], s_r, data, periods=2,
+                                  chain=chain_r, ckpt_dir=ck,
+                                  start_period=p0)
+    s_u, chain_u, _ = run_service(*svc_env["args"], state, data,
+                                  periods=2,
+                                  ckpt_dir=str(tmp_path / "u2"))
+    for a, b in zip(jax.tree.leaves(s_c), jax.tree.leaves(s_u)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    assert [b.payload for b in chain_c.blocks] == \
+        [b.payload for b in chain_u.blocks]
+
+
+def test_every_checkpoint_corrupt_raises(svc_env, tmp_path):
+    state, data = svc_env["state"], svc_env["data"]
+    ck = str(tmp_path / "allbad")
+    run_service(*svc_env["args"], state, data, periods=2, ckpt_dir=ck)
+    for f in os.listdir(ck):
+        if f.endswith(".npz"):
+            with open(os.path.join(ck, f), "wb") as fh:
+                fh.write(b"not a zipfile")
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        with pytest.raises(ValueError, match="failed to load"):
+            resume_service(ck, state)
+
+
+# ---------------------------------------------------------------------------
+# ledger rollback refusal + fork recovery (satellites)
+# ---------------------------------------------------------------------------
+def test_resume_refuses_rolled_back_ledger(svc_env, tmp_path):
+    """A ledger that VERIFIES but is shorter than the checkpoint's
+    round counter is a silent-rollback symptom — distinct, actionable
+    refusal (not the tamper error)."""
+    state, data = svc_env["state"], svc_env["data"]
+    ck = str(tmp_path / "rb")
+    _, chain, _ = run_service(*svc_env["args"], state, data, periods=2,
+                              ckpt_dir=ck)
+    rolled = rollback_view(chain, 1)
+    assert rolled.verify_chain()            # valid — just missing history
+    save_chain(os.path.join(ck, "chain.json"), rolled)
+    with pytest.raises(LedgerRollbackError, match="behind the"):
+        resume_service(ck, state)
+
+
+def test_fork_recovery_prefers_longest_valid(svc_env, tmp_path):
+    state, data = svc_env["state"], svc_env["data"]
+    ck = str(tmp_path / "fork")
+    _, chain, _ = run_service(*svc_env["args"], state, data, periods=2,
+                              ckpt_dir=ck)
+    full_head = chain.head_round()
+    # the canonical file rolls back; the full history survives only as
+    # a fork view — recovery must pick the longer fork and resume
+    save_chain(os.path.join(ck, "chain.json"), rollback_view(chain, 1))
+    write_fork_view(ck, chain, idx=1)
+    s_r, chain_r, p0 = resume_service(ck, state)
+    assert p0 == 2 and chain_r.head_round() == full_head
+    # a same-length divergent fork NEVER beats the canonical file
+    save_chain(os.path.join(ck, "chain.json"), chain)
+    write_fork_view(ck, divergent_view(chain, 1), idx=1)
+    chosen = recover_chain(ck)
+    assert "fork" not in chosen.blocks[-1].payload
+    # and an unreadable canonical file falls back to a valid fork
+    with open(os.path.join(ck, "chain.json"), "w") as fh:
+        fh.write("{corrupt")
+    with pytest.warns(UserWarning, match="unreadable"):
+        chosen2 = recover_chain(ck)
+    assert chosen2.verify_chain()
+
+
+def test_driver_writes_fork_view_at_fork_at(svc_env, tmp_path):
+    state, data = svc_env["state"], svc_env["data"]
+    ck = str(tmp_path / "forkat")
+    run_service(*svc_env["args"], state, data, periods=2, ckpt_dir=ck,
+                faults=FaultPlan(seed=4, fork_at=0))
+    assert os.path.exists(os.path.join(ck, "chain.fork0.json"))
+    # the injected competitor is the SHORTER view, so a normal resume
+    # still picks chain.json
+    s_r, chain_r, p0 = resume_service(ck, state)
+    assert p0 == 2 and chain_r.head_round() == 2
+
+
+def test_head_round():
+    chain = Blockchain()
+    assert chain.head_round() == -1
+    chain.publish_round(0, {})
+    chain.publish_round(3, {})
+    assert chain.head_round() == 3
+    assert rollback_view(chain, 1).head_round() == 0
+    with pytest.raises(ValueError, match="drop_last"):
+        rollback_view(chain, 3)
+
+
+def test_mask_stragglers_is_churn_masking(svc_env):
+    state = svc_env["state"]
+    strag = np.array([False, True, False, False, True, False])
+    masked = mask_stragglers(state, strag)
+    assert np.asarray(masked.active).tolist() == \
+        (~strag).tolist()
+    # everything else untouched
+    for a, b in zip(jax.tree.leaves(state._replace(active=masked.active)),
+                    jax.tree.leaves(masked)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
